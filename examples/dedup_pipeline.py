@@ -1,0 +1,45 @@
+"""Production integration of the paper: corpus near-dup removal.
+
+    PYTHONPATH=src python examples/dedup_pipeline.py
+
+Builds a synthetic corpus with planted near-duplicate clusters, runs the
+MinHash-LSH -> similarity-graph -> Contour connected-components pipeline
+(DESIGN.md §2: the CC step is where RefinedWeb/SlimPajama-scale dedup
+needs a scalable parallel algorithm), and reports recovered clusters +
+which Contour variant converged fastest.
+"""
+import time
+
+import numpy as np
+
+from repro.data.dedup import minhash_dedup
+from repro.data.pipeline import make_corpus
+
+
+def main():
+    n_docs = 800
+    docs = make_corpus(n_docs=n_docs, doc_len=250, vocab_size=2000,
+                       dup_fraction=0.35, near_dup_noise=0.04, seed=13)
+    print(f"corpus: {n_docs} docs, ~35% planted near-duplicates\n")
+
+    for variant in ("C-1", "C-2", "C-m"):
+        t0 = time.perf_counter()
+        report = minhash_dedup(docs, n_hashes=64, bands=16, variant=variant)
+        dt = time.perf_counter() - t0
+        print(f"variant {variant:4s}: {report.n_clusters:4d} clusters "
+              f"({int(report.keep.sum())} docs kept), "
+              f"{report.n_candidate_pairs} LSH pairs, "
+              f"CC converged in {report.cc_iterations} iterations, "
+              f"total {dt:.2f}s")
+
+    report = minhash_dedup(docs, n_hashes=64, bands=16)
+    sizes = np.bincount(report.labels)
+    sizes = np.sort(sizes[sizes > 0])[::-1]
+    print(f"\nlargest duplicate clusters: {sizes[:8].tolist()}")
+    print(f"kept representative = min doc id per cluster "
+          f"(Contour's min-label fixed point): "
+          f"{np.flatnonzero(report.keep)[:8].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

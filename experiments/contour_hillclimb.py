@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede any jax import — production mesh needs 512 placeholders)
+
+"""§Perf hillclimb (b): contour-cc on the production meshes.
+
+Lowers the paper-faithful distributed Contour solve and the beyond-paper
+variants against the 2^28-vertex / 2^31-edge graph, and reports the
+three roofline terms *per solve*:
+
+  base      local_rounds=1, check_every=1, max_iters=8   (paper Alg.1+§III-B)
+  lr2       local_rounds=2, check_every=1, max_iters=5   (stale local merges)
+  lr2+ce2   local_rounds=2, check_every=2, max_iters=5
+  lr4+ce2   local_rounds=4, check_every=2, max_iters=4
+
+max_iters per variant = measured convergence rounds on representative
+8-way-sharded graphs (benchmarks/distributed_scaling.py): path-class
+diameters converge in 13/8/8/6 rounds at lr=1/2/2/4 scaled to the
+Theorem-1 budget for the dry-run graph (8/5/5/4).
+
+Usage: PYTHONPATH=src python experiments/contour_hillclimb.py [--mesh multi]
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import distributed_contour_step_fn
+from repro.launch.dryrun import CONTOUR_N_EDGES, CONTOUR_N_VERTICES
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze_compiled
+
+VARIANTS = [
+    ("base_lr1_ce1", dict(local_rounds=1, check_every=1), 8),
+    ("lr2_ce1", dict(local_rounds=2, check_every=1), 5),
+    ("lr2_ce2", dict(local_rounds=2, check_every=2), 5),
+    ("lr4_ce2", dict(local_rounds=4, check_every=2), 4),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "contour_hillclimb.json"))
+    args = ap.parse_args()
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    mesh_name = "pod2x16x16" if multi else "pod1x16x16"
+    edge_axes = ("pod", "data") if multi else ("data",)
+    spec = P(edge_axes if len(edge_axes) > 1 else edge_axes[0])
+    shard = NamedSharding(mesh, spec)
+    sds = jax.ShapeDtypeStruct((CONTOUR_N_EDGES,), jnp.int32)
+
+    results = []
+    for name, kw, iters in VARIANTS:
+        fn = lambda s, d: distributed_contour_step_fn(
+            s, d, CONTOUR_N_VERTICES, mesh, edge_axes=edge_axes,
+            max_iters=iters, **kw)
+        compiled = jax.jit(fn, in_shardings=(shard, shard)).lower(
+            sds, sds).compile()
+        rep = analyze_compiled(
+            compiled, arch="contour-cc", shape=f"graph_2e31[{name}]",
+            mesh_name=mesh_name, kind="contour", n_devices=mesh.size,
+            note=f"{kw}, {iters} rounds/solve")
+        print(f"{name:14s} rounds={iters}  "
+              f"t_mem={rep.t_memory*1e3:8.1f}ms  "
+              f"t_coll={rep.t_collective*1e3:8.1f}ms  "
+              f"coll_GB/dev={rep.collective_link_bytes/2**30:6.2f}  "
+              f"dominant={rep.dominant}")
+        results.append({"variant": name, "mesh": mesh_name,
+                        "rounds": iters, **rep.to_dict()})
+    prev = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            prev = json.load(f)
+    with open(args.out, "w") as f:
+        json.dump(prev + results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

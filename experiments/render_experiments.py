@@ -1,0 +1,69 @@
+"""Insert the rendered dry-run/roofline tables into EXPERIMENTS.md.
+
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers
+(idempotent: regenerating overwrites the previous render between marker
+fences).
+
+Usage: PYTHONPATH=src python experiments/render_experiments.py
+"""
+import os
+import re
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, ".."))
+
+from benchmarks.roofline_report import load, render, summarize  # noqa: E402
+
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+
+def splice(text: str, marker: str, payload: str) -> str:
+    fence_start = f"<!-- {marker} -->"
+    fence_end = f"<!-- /{marker} -->"
+    block = f"{fence_start}\n```\n{payload}\n```\n{fence_end}"
+    if fence_end in text:
+        pat = re.compile(re.escape(fence_start) + r".*?" + re.escape(fence_end),
+                         re.S)
+        return pat.sub(block, text)
+    return text.replace(fence_start, block)
+
+
+def main():
+    rows = load()
+    if not rows:
+        raise SystemExit("no dry-run JSONs; run the dry-run first")
+    with open(EXP) as f:
+        text = f.read()
+
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    dryrun_summary = [
+        f"cells: ok={len(ok)} skipped={len(skipped)} "
+        f"error={sum(r['status'] == 'error' for r in rows)}",
+        "",
+        "per-device peak memory (arguments + temp - aliased), GB, by cell:",
+    ]
+    for r in ok:
+        m = r["memory"]
+        peak = (m["argument_bytes"] + m["temp_bytes"] - m["alias_bytes"]) / 2**30
+        flag = "  (!)" if peak > 16 else ""
+        dryrun_summary.append(
+            f"  {r['arch']:<24} {r['shape']:<12} {r['mesh']:<11} "
+            f"{peak:7.2f}{flag}")
+    dryrun_summary.append("")
+    dryrun_summary.append("(!) = exceeds a 16 GB v5e chip under CPU XLA's "
+                          "buffer assignment — causes analysed in §Roofline")
+    text = splice(text, "DRYRUN_TABLE", "\n".join(dryrun_summary))
+
+    roof = render(rows) + "\n\n" + summarize(rows)
+    text = splice(text, "ROOFLINE_TABLE", roof)
+
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated "
+          f"({len(ok)} ok cells, {len(skipped)} skips rendered)")
+
+
+if __name__ == "__main__":
+    main()

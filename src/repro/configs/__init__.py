@@ -1,0 +1,40 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolution.
+
+Ten architectures from the public pool (see per-module docstrings for the
+exact assignment line and citation) plus the paper's own workload config
+(`contour_cc`) for the graph-connectivity engine.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import SHAPES, ArchSpec, ShapeSpec, input_specs
+
+from repro.configs.stablelm_1_6b import ARCH as _stablelm
+from repro.configs.olmo_1b import ARCH as _olmo
+from repro.configs.mistral_nemo_12b import ARCH as _nemo
+from repro.configs.yi_6b import ARCH as _yi
+from repro.configs.xlstm_125m import ARCH as _xlstm
+from repro.configs.zamba2_2_7b import ARCH as _zamba
+from repro.configs.deepseek_moe_16b import ARCH as _dsmoe
+from repro.configs.arctic_480b import ARCH as _arctic
+from repro.configs.llava_next_34b import ARCH as _llava
+from repro.configs.seamless_m4t_large_v2 import ARCH as _seamless
+
+ARCHS: Dict[str, ArchSpec] = {
+    a.name: a
+    for a in (
+        _stablelm, _olmo, _nemo, _yi, _xlstm,
+        _zamba, _dsmoe, _arctic, _llava, _seamless,
+    )
+}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; one of {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ARCHS", "SHAPES", "ArchSpec", "ShapeSpec", "get_arch",
+           "input_specs"]

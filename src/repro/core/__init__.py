@@ -1,0 +1,22 @@
+"""Core: the paper's Contour connectivity algorithm + baselines."""
+from repro.core.contour import (
+    VARIANTS,
+    connected_components,
+    contour,
+    contour_labels,
+)
+from repro.core.fastsv import fastsv, fastsv_labels
+from repro.core.lp import label_propagation, label_propagation_labels
+from repro.core import labels
+
+__all__ = [
+    "VARIANTS",
+    "connected_components",
+    "contour",
+    "contour_labels",
+    "fastsv",
+    "fastsv_labels",
+    "label_propagation",
+    "label_propagation_labels",
+    "labels",
+]

@@ -1,0 +1,161 @@
+"""The Contour connectivity algorithm (paper Alg. 1) and its six variants.
+
+Variants (paper §III-B4):
+
+* ``C-Syn``  — Alg. 1 verbatim: synchronous 2-order sweeps, double
+  buffered, plain no-change convergence test.
+* ``C-1``    — 1-order operator + async recompaction + early check.
+* ``C-2``    — 2-order operator + async recompaction + early check
+  (the paper's default).
+* ``C-m``    — high-order operator: realised as a 2-order edge sweep
+  followed by ``log2(m)`` pointer-jump rounds (same fixed point as the
+  literal L^m chain; DESIGN.md §3).
+* ``C-11mm`` — ``warmup`` iterations of C-1 then C-m until convergence.
+* ``C-1m1m`` — alternate C-1 and C-m per iteration.
+
+Every variant is a pure function of the edge list, runs under ``jax.jit``
+with a ``lax.while_loop``, and returns ``(labels, n_iterations)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import labels as lab
+from repro.graphs.structs import Graph
+
+VARIANTS = ("C-Syn", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m")
+
+# C-m's effective order: the paper uses m = 1024; log2(1024) = 10 jump
+# rounds after the 2-order edge sweep covers the same mapping depth.
+_CM_JUMP_ROUNDS = 10
+
+
+class ContourState(NamedTuple):
+    L: jax.Array
+    it: jax.Array          # int32 iteration counter
+    done: jax.Array        # bool
+
+
+def _sweep_sync(L, src, dst, order):
+    """Alg. 1 body: one synchronous MM^order sweep."""
+    return lab.mm_relax(L, src, dst, order)
+
+
+def _sweep_async(L, src, dst, order, jump_rounds, compress):
+    """Optimised sweep: MM^order + pointer-jump recompaction.
+
+    ``jump_rounds`` realises high-order variants; ``compress`` is the
+    async-update adaptation (spreads freshly lowered labels inside the
+    same iteration, mirroring the paper's in-place updates).
+    """
+    L = lab.mm_relax(L, src, dst, order)
+    L = lab.pointer_jump(L, rounds=jump_rounds + compress)
+    return L
+
+
+def _make_step(variant: str, warmup: int, async_compress: int):
+    """Return step(L, it, src, dst) -> L_new for the chosen variant."""
+    if variant == "C-Syn":
+        def step(L, it, src, dst):
+            del it
+            return _sweep_sync(L, src, dst, order=2)
+    elif variant == "C-1":
+        def step(L, it, src, dst):
+            del it
+            return _sweep_async(L, src, dst, 1, 0, async_compress)
+    elif variant == "C-2":
+        def step(L, it, src, dst):
+            del it
+            return _sweep_async(L, src, dst, 2, 0, async_compress)
+    elif variant == "C-m":
+        def step(L, it, src, dst):
+            del it
+            return _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, async_compress)
+    elif variant == "C-11mm":
+        def step(L, it, src, dst):
+            return jax.lax.cond(
+                it < warmup,
+                lambda L: _sweep_async(L, src, dst, 1, 0, async_compress),
+                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, async_compress),
+                L,
+            )
+    elif variant == "C-1m1m":
+        def step(L, it, src, dst):
+            return jax.lax.cond(
+                it % 2 == 0,
+                lambda L: _sweep_async(L, src, dst, 1, 0, async_compress),
+                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, async_compress),
+                L,
+            )
+    elif variant.startswith("C-") and variant[2:].isdigit():
+        # literal h-order minimum-mapping operator (Definition 3): the
+        # length-h gather chain per edge, exactly as written in the paper.
+        # The named C-m variant realises high orders via pointer jumping
+        # instead (same fixed point, TPU-vectorisable — DESIGN.md §3);
+        # this literal form exists to validate that equivalence.
+        order = int(variant[2:])
+
+        def step(L, it, src, dst):
+            del it
+            return _sweep_async(L, src, dst, order, 0, async_compress)
+    else:
+        raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS} "
+                         "or literal 'C-<h>'")
+    return step
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_vertices", "variant", "max_iters", "warmup", "async_compress"),
+)
+def contour_labels(
+    src: jax.Array,
+    dst: jax.Array,
+    n_vertices: int,
+    *,
+    variant: str = "C-2",
+    max_iters: int = 100_000,
+    warmup: int = 2,
+    async_compress: int = 1,
+):
+    """Run the Contour algorithm; returns (labels[n], n_iterations).
+
+    Labels converge to the minimum vertex id of each component.
+    """
+    step = _make_step(variant, warmup, async_compress)
+    sync = variant == "C-Syn"
+    L0 = jnp.arange(n_vertices, dtype=src.dtype)
+
+    def cond(s: ContourState):
+        return (~s.done) & (s.it < max_iters)
+
+    def body(s: ContourState):
+        L_new = step(s.L, s.it, src, dst)
+        if sync:
+            done = jnp.all(L_new == s.L)  # Alg. 1 line 10: no label change
+        else:
+            done = lab.converged_early(L_new, src, dst)  # paper §III-B2
+        return ContourState(L=L_new, it=s.it + 1, done=done)
+
+    init = ContourState(L=L0, it=jnp.int32(0), done=jnp.array(False))
+    out = jax.lax.while_loop(cond, body, init)
+    # Final compression: at the early-convergence point the pointer graph
+    # restricted to edge endpoints is a star forest; interior tree vertices
+    # of padded/isolated chains may still be one hop away.
+    L = lab.pointer_jump(out.L, rounds=1)
+    return L, out.it
+
+
+def contour(graph: Graph, **kw):
+    """Convenience wrapper over :func:`contour_labels`."""
+    return contour_labels(graph.src, graph.dst, graph.n_vertices, **kw)
+
+
+def connected_components(graph: Graph, variant: str = "C-2") -> jax.Array:
+    """Public API: min-vertex-id component labels."""
+    L, _ = contour(graph, variant=variant)
+    return L

@@ -1,0 +1,10 @@
+"""ConnectIt stand-in: Rem's union-find with splicing (paper §III-C).
+
+Host-side by design: Rem's algorithm is sequential pointer-chasing with no
+efficient TPU analogue (the paper itself positions it as the winner only
+in parallelism-starved regimes — DESIGN.md §8.5).  Exposed from
+``repro.core`` so benchmarks compare all three families through one API.
+"""
+from repro.graphs.oracle import rem_union_find
+
+__all__ = ["rem_union_find"]

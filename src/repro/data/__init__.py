@@ -1,0 +1,4 @@
+from repro.data.pipeline import SyntheticTokenPipeline, make_corpus
+from repro.data.dedup import minhash_dedup, DedupReport
+
+__all__ = ["SyntheticTokenPipeline", "make_corpus", "minhash_dedup", "DedupReport"]

@@ -1,0 +1,112 @@
+"""MinHash-LSH near-duplicate detection with Contour connected components.
+
+This is the production integration of the paper's algorithm (DESIGN.md §5):
+RefinedWeb/SlimPajama-style dedup builds a similarity graph from MinHash
+LSH collisions and needs connected components to turn pairwise collisions
+into duplicate *clusters* — at corpus scale the CC step is the scalability
+bottleneck, which is exactly the regime Contour targets (massive edge
+parallelism, tiny iteration count).
+
+Pipeline: shingle -> MinHash signatures -> LSH banding -> candidate pairs
+-> Contour CC -> keep the minimum doc id per cluster (Contour's min-label
+fixed point *is* the canonical representative).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.contour import contour_labels
+from repro.graphs.structs import Graph, canonicalize_edges
+
+_MERSENNE = (1 << 61) - 1
+
+
+@dataclasses.dataclass
+class DedupReport:
+    labels: np.ndarray          # cluster label (min doc id) per doc
+    keep: np.ndarray            # bool per doc: cluster representative?
+    n_clusters: int
+    n_candidate_pairs: int
+    cc_iterations: int
+
+
+def _shingles(doc: np.ndarray, k: int) -> np.ndarray:
+    if doc.shape[0] < k:
+        return doc[None, :].copy() if doc.shape[0] else np.zeros((1, 1), np.int64)
+    return np.lib.stride_tricks.sliding_window_view(doc, k)
+
+
+def minhash_signatures(
+    docs: Sequence[np.ndarray], n_hashes: int = 64, shingle: int = 5, seed: int = 0
+) -> np.ndarray:
+    """(n_docs, n_hashes) int64 MinHash signatures."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, _MERSENNE, n_hashes, dtype=np.int64)
+    b = rng.integers(0, _MERSENNE, n_hashes, dtype=np.int64)
+    sigs = np.empty((len(docs), n_hashes), np.int64)
+    for i, doc in enumerate(docs):
+        sh = _shingles(np.asarray(doc, np.int64), shingle)
+        # polynomial-hash each shingle to one 61-bit value
+        h = np.zeros(sh.shape[0], np.int64)
+        for c in range(sh.shape[1]):
+            h = (h * np.int64(1_000_003) + sh[:, c]) % _MERSENNE
+        hv = (h[:, None] * a[None, :] + b[None, :]) % _MERSENNE
+        sigs[i] = hv.min(axis=0)
+    return sigs
+
+
+def lsh_candidate_pairs(
+    sigs: np.ndarray, bands: int = 16
+) -> tuple[np.ndarray, np.ndarray]:
+    """Band the signatures; docs sharing any band bucket become an edge."""
+    n_docs, n_hashes = sigs.shape
+    assert n_hashes % bands == 0
+    rows = n_hashes // bands
+    srcs, dsts = [], []
+    for b in range(bands):
+        band = sigs[:, b * rows : (b + 1) * rows]
+        key = np.zeros(n_docs, np.int64)
+        for c in range(rows):
+            key = (key * np.int64(1_000_003) + band[:, c]) % _MERSENNE
+        order = np.argsort(key, kind="stable")
+        ks = key[order]
+        # group boundaries; chain consecutive members of each bucket
+        same = ks[1:] == ks[:-1]
+        srcs.append(order[:-1][same])
+        dsts.append(order[1:][same])
+    if not srcs:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
+    return np.concatenate(srcs).astype(np.int64), np.concatenate(dsts).astype(np.int64)
+
+
+def minhash_dedup(
+    docs: Sequence[np.ndarray],
+    *,
+    n_hashes: int = 64,
+    bands: int = 16,
+    shingle: int = 5,
+    seed: int = 0,
+    variant: str = "C-2",
+) -> DedupReport:
+    """Full dedup pass; the CC step runs the paper's Contour algorithm."""
+    n = len(docs)
+    sigs = minhash_signatures(docs, n_hashes=n_hashes, shingle=shingle, seed=seed)
+    src, dst = lsh_candidate_pairs(sigs, bands=bands)
+    src, dst = canonicalize_edges(src, dst, n)
+    if src.shape[0] == 0:
+        labels = np.arange(n)
+        return DedupReport(labels, np.ones(n, bool), n, 0, 0)
+    g = Graph.from_numpy(src, dst, n)
+    L, iters = contour_labels(g.src, g.dst, g.n_vertices, variant=variant)
+    labels = np.asarray(L)
+    keep = labels == np.arange(n)
+    return DedupReport(
+        labels=labels,
+        keep=keep,
+        n_clusters=int(keep.sum()),
+        n_candidate_pairs=int(src.shape[0]),
+        cc_iterations=int(iters),
+    )

@@ -1,0 +1,17 @@
+"""Graph substrate: edge-list structures, generators, oracles, statistics."""
+from repro.graphs.structs import Graph, canonicalize_edges, build_csr
+from repro.graphs import generators
+from repro.graphs.oracle import connected_components_oracle, rem_union_find
+from repro.graphs.stats import component_sizes, degree_stats, approx_max_diameter
+
+__all__ = [
+    "Graph",
+    "canonicalize_edges",
+    "build_csr",
+    "generators",
+    "connected_components_oracle",
+    "rem_union_find",
+    "component_sizes",
+    "degree_stats",
+    "approx_max_diameter",
+]

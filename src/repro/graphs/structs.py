@@ -1,0 +1,113 @@
+"""Edge-list graph structure used by every connectivity algorithm.
+
+The Contour paper operates on an undirected edge list ``E`` plus a label
+array ``L``.  We keep the same representation: two int32 arrays ``src`` and
+``dst`` of equal length ``m`` (each undirected edge stored once) plus the
+static vertex count ``n``.  The struct is a registered pytree so it can be
+passed straight through ``jax.jit`` / ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph as an edge list.
+
+    Attributes:
+      src: int32[m] edge sources.
+      dst: int32[m] edge destinations.
+      n_vertices: static python int, number of vertices (ids are 0..n-1).
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    n_vertices: int
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.src, self.dst), self.n_vertices
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        src, dst = children
+        return cls(src=src, dst=dst, n_vertices=aux)
+
+    # -- convenience -----------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def symmetrized(self) -> "Graph":
+        """Return a graph with both edge directions materialised."""
+        return Graph(
+            src=jnp.concatenate([self.src, self.dst]),
+            dst=jnp.concatenate([self.dst, self.src]),
+            n_vertices=self.n_vertices,
+        )
+
+    @classmethod
+    def from_numpy(cls, src: np.ndarray, dst: np.ndarray, n_vertices: int) -> "Graph":
+        return cls(
+            src=jnp.asarray(src, dtype=jnp.int32),
+            dst=jnp.asarray(dst, dtype=jnp.int32),
+            n_vertices=int(n_vertices),
+        )
+
+    def to_numpy(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        return np.asarray(self.src), np.asarray(self.dst), self.n_vertices
+
+    def pad_edges(self, target_m: int, fill_vertex: int = 0) -> "Graph":
+        """Pad the edge list to ``target_m`` with self-loop edges.
+
+        Self-loops ``(fill_vertex, fill_vertex)`` are no-ops for every
+        connectivity algorithm here (min(L[v], L[v]) == L[v]) which makes
+        them the natural padding for even sharding across devices.
+        """
+        m = self.n_edges
+        if target_m < m:
+            raise ValueError(f"target_m={target_m} < m={m}")
+        pad = target_m - m
+        if pad == 0:
+            return self
+        fill = jnp.full((pad,), fill_vertex, dtype=jnp.int32)
+        return Graph(
+            src=jnp.concatenate([self.src, fill]),
+            dst=jnp.concatenate([self.dst, fill]),
+            n_vertices=self.n_vertices,
+        )
+
+
+def canonicalize_edges(
+    src: np.ndarray, dst: np.ndarray, n_vertices: int, drop_self_loops: bool = True
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sort edges as (min,max) pairs, dedupe, optionally drop self loops."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    if drop_self_loops:
+        keep = lo != hi
+        lo, hi = lo[keep], hi[keep]
+    key = lo * n_vertices + hi
+    key = np.unique(key)
+    return (key // n_vertices).astype(np.int32), (key % n_vertices).astype(np.int32)
+
+
+def build_csr(src: np.ndarray, dst: np.ndarray, n_vertices: int):
+    """Build a CSR adjacency (row_ptr, col_idx) from an undirected edge list."""
+    s = np.concatenate([src, dst]).astype(np.int64)
+    d = np.concatenate([dst, src]).astype(np.int64)
+    order = np.argsort(s, kind="stable")
+    s, d = s[order], d[order]
+    counts = np.bincount(s, minlength=n_vertices)
+    row_ptr = np.zeros(n_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    return row_ptr, d.astype(np.int32)

@@ -1,0 +1,4 @@
+from repro.kernels.contour_mm.ops import contour_mm_step, contour_cc_fixpoint
+from repro.kernels.contour_mm.ref import mm_block_ref
+
+__all__ = ["contour_mm_step", "contour_cc_fixpoint", "mm_block_ref"]

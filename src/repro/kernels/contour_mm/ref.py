@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the contour_mm Pallas kernel.
+
+Replays the kernel's exact semantics — a *sequential* in-place 2-order
+minimum-mapping sweep in edge order — using functional ``.at[]`` updates.
+The kernel must match this bit-for-bit for every edge order, which pins
+down the deterministic-async semantics (not just the fixed point).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mm_block_ref(src: jax.Array, dst: jax.Array, L: jax.Array) -> jax.Array:
+    """Sequential async 2-order MM sweep; identical order to the kernel."""
+
+    def body(e, L):
+        w = src[e]
+        v = dst[e]
+        lw = L[w]
+        lv = L[v]
+        z = jnp.minimum(L[lw], L[lv])
+        L = L.at[w].min(z)
+        L = L.at[v].min(z)
+        L = L.at[lw].min(z)
+        L = L.at[lv].min(z)
+        return L
+
+    return jax.lax.fori_loop(0, src.shape[0], body, L)
+
+
+def mm_sync_ref(src: jax.Array, dst: jax.Array, L: jax.Array) -> jax.Array:
+    """Synchronous (Alg. 1) sweep — the XLA scatter-min backend's oracle."""
+    lw, lv = L[src], L[dst]
+    z = jnp.minimum(L[lw], L[lv])
+    idx = jnp.concatenate([src, dst, lw, lv])
+    return L.at[idx].min(jnp.tile(z, 4))

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: GQA flash attention (streaming softmax).
+
+Grid = (B*H, nq, nk) with the KV axis innermost ("arbitrary" semantics):
+each (batch*head, q-block) owns fp32 VMEM scratch accumulators (running
+max m, normaliser l, output acc) that persist across the nk steps — the
+FlashAttention recurrence on the MXU, with HBM traffic O(T*hd) per head
+instead of O(T^2).
+
+GQA is handled in the k/v BlockSpec index map: query head h reads KV head
+h // (H/Hkv), so K/V are never repeated in memory (the xlstm/yi/nemo
+configs would pay 4-8x HBM without this).
+
+VMEM budget per grid step: q block (bq x hd) + k/v blocks (bk x hd) in the
+input dtype + 3 fp32 scratch blocks (bq x hd, bq x 1 x 2) — e.g.
+bq=bk=512, hd=128, bf16: ~0.72 MB, far under the ~16 MB/core budget, so
+block sizes are free to grow toward MXU efficiency (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    iq = pl.program_id(1)
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # Causal: whole block is masked out when its first k is past the last q.
+    run = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, block_q: int = 128, block_k: int = 128,
+              interpret: bool = True) -> jax.Array:
+    """q: (B, H, T, hd); k/v: (B, Hkv, S, hd) with Hkv | H. -> (B, H, T, hd).
+
+    T % block_q == 0 and S % block_k == 0 (ops.py pads).
+    """
+    b, h, t, hd = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = t // block_q, s // block_k
+
+    qf = q.reshape(b * h, t, hd)
+    kf = k.reshape(b * hkv, s, hd)
+    vf = v.reshape(b * hkv, s, hd)
+
+    def kv_index(bh, iq, ik):
+        return (bh // h * hkv + (bh % h) // group, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=block_q, bk=block_k, nk=nk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, hd), q.dtype),
+        scratch_shapes=[
+            pltpu_vmem((block_q, 1), jnp.float32),   # running max m
+            pltpu_vmem((block_q, 1), jnp.float32),   # normaliser l
+            pltpu_vmem((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, hd)
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocator (TPU memory space; interpret-mode emulated)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,51 @@
+"""Jit'd wrapper for flash attention with backend selection + padding.
+
+``backend="pallas"`` runs the fused VMEM kernel (interpret mode on CPU,
+compiled on TPU); ``backend="xla"`` is the chunked streaming-softmax
+expressed at the XLA level (`repro.models.attention.attend_chunked`) —
+the path the CPU dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_mha
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _pad_seq(x, block: int, axis: int):
+    t = x.shape[axis]
+    target = (t + block - 1) // block * block
+    if target == t:
+        return x, 0
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - t)
+    return jnp.pad(x, pad), target - t
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "backend", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    backend: str = "pallas", interpret: bool = True):
+    """q: (B, H, T, hd); k/v: (B, Hkv, S, hd). Returns (B, H, T, hd).
+
+    Handles non-divisible sequence lengths by padding K/V with masked
+    positions (causal mask keeps padded keys dead; padded queries are
+    sliced off).
+    """
+    if backend == "xla":
+        return mha_ref(q, k, v, causal=causal)
+    t = q.shape[2]
+    q_p, _ = _pad_seq(q, block_q, 2)
+    k_p, pad_k = _pad_seq(k, block_k, 2)
+    v_p, _ = _pad_seq(v, block_k, 2)
+    if pad_k and not causal:
+        raise ValueError("non-causal flash requires S % block_k == 0")
+    out = flash_mha(q_p, k_p, v_p, causal=causal,
+                    block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :, :t, :]

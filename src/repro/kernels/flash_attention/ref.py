@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash_attention kernel: exact GQA softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True) -> jax.Array:
+    """q: (B, H, T, hd); k/v: (B, Hkv, S, hd). fp32 softmax, exact."""
+    b, h, t, hd = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, t, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(t)[:, None]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", w, vf)
+    return out.reshape(b, h, t, hd).astype(q.dtype)

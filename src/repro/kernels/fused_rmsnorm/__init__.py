@@ -1,0 +1,3 @@
+from repro.kernels.fused_rmsnorm.ops import fused_rmsnorm
+
+__all__ = ["fused_rmsnorm"]

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused RMSNorm (mean-square + rsqrt + scale, one pass).
+
+Unfused, RMSNorm reads x twice (once for the reduction, once for the
+normalisation) and round-trips an fp32 intermediate through HBM; at
+d_model 7168 x 1M tokens that's multiple GB per layer.  The kernel tiles
+rows into VMEM blocks, does the reduction and the scaled write in one
+visit: HBM traffic = read x + write y + read scale, the streaming minimum.
+
+Grid walks row blocks; each block (block_rows x d) lives in VMEM
+(block_rows=256, d=8192, bf16 -> 4 MB, within budget; ops.py shrinks the
+block for wider models).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)             # (block_rows, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm_rows(x: jax.Array, w: jax.Array, *, block_rows: int = 256,
+                 eps: float = 1e-5, interpret: bool = True) -> jax.Array:
+    """x: (R, d) with R % block_rows == 0; w: (d,). Returns (R, d)."""
+    r, d = x.shape
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,33 @@
+"""Jit'd wrapper for fused RMSNorm: reshapes, padding, backend select."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_rmsnorm.kernel import rmsnorm_rows
+from repro.kernels.fused_rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "backend", "interpret"))
+def fused_rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+                  backend: str = "pallas", interpret: bool = True):
+    """x: (..., d); w: (d,). RMS-normalise the trailing dim."""
+    if backend == "xla":
+        return rmsnorm_ref(x, w, eps)
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    # block size: keep the VMEM tile under ~4MB
+    block = max(8, min(256, (4 << 20) // max(d * x.dtype.itemsize, 1)))
+    target = (rows + block - 1) // block * block
+    if target != rows:
+        xf = jnp.concatenate(
+            [xf, jnp.ones((target - rows, d), x.dtype)], axis=0)
+    y = rmsnorm_rows(xf, w, block_rows=block, eps=eps, interpret=interpret)
+    return y[:rows].reshape(shape)

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the host
+# device count at first initialisation, and the production meshes below
+# need 512 placeholder devices.  Only the dry-run gets this flag — tests,
+# benches and examples see the real device count.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the exact production step function — train_step
+(loss + AdamW update, donated state), serve prefill, or serve decode —
+against ``ShapeDtypeStruct`` inputs (no allocation), compiles it for the
+16x16 single-pod and 2x16x16 multi-pod meshes, prints
+``compiled.memory_analysis()`` (proof it fits) and derives the roofline
+terms for EXPERIMENTS.md.
+
+The paper's own workload — distributed Contour connectivity over a
+paper-scale graph (2^28 vertices, 2^31 edges) — runs as an extra "arch"
+(``contour-cc``) through the same harness.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch, input_specs
+from repro.configs.base import ArchSpec
+from repro.launch.mesh import make_production_mesh
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.model import build_model
+from repro.optim.adamw import OptConfig
+from repro.roofline import analyze_compiled, model_flops
+from repro.train.step import make_train_step
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+# Paper-scale contour graph for the contour-cc cells.
+CONTOUR_N_VERTICES = 1 << 28          # 268M vertices (kmer_V1r: 214M)
+CONTOUR_N_EDGES = 1 << 31             # 2.1B directed relaxations
+
+
+def _mesh_and_name(which: str):
+    if which == "single":
+        return make_production_mesh(multi_pod=False), "pod1x16x16"
+    return make_production_mesh(multi_pod=True), "pod2x16x16"
+
+
+def _resolve_tree(specs_tree, config, mesh, axes_fn):
+    """NamedShardings for a dict of ShapeDtypeStructs via logical axes."""
+    rules = cm.make_rules(config, mesh)
+    out = {}
+    for key, sds in specs_tree.items():
+        axes = axes_fn(key, sds)
+        out[key] = NamedSharding(
+            mesh, cm.resolve_spec(sds.shape, axes, mesh, rules))
+    return out
+
+
+def _batch_axes(key: str, sds) -> tuple:
+    if key in ("tokens", "labels", "loss_mask"):
+        return ("batch",) + (None,) * (len(sds.shape) - 1)
+    # patch_embeds / frame_embeds: (B, T, d)
+    return ("batch", None, None)
+
+
+def _abstract_params(model, dtype):
+    return cm.abstract_tree(model.param_specs(), dtype)
+
+
+def _cache_shardings(model, config, mesh, cache_shapes):
+    plan = getattr(model, "plan", None)
+    if plan is None:                       # Seq2Seq
+        plan = model.dec_plan
+    resolvers = tfm.cache_shardings(config, mesh, plan)
+    return tfm.resolve_cache_shardings(resolvers, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (lowered, kind, model_flops, n_devices)
+# ---------------------------------------------------------------------------
+
+def lower_train(arch: ArchSpec, shape, mesh) -> Any:
+    config = arch.config
+    model = build_model(config, mesh)
+    opt = OptConfig(moment_dtype=(jnp.bfloat16
+                                  if config.param_dtype == jnp.bfloat16
+                                  else jnp.float32))
+    multi = "pod" in mesh.axis_names
+    step = make_train_step(model, opt, grad_accum=arch.accum_for(multi))
+
+    pspecs = model.param_specs()
+    pshard = cm.shardings_for(pspecs, config, mesh)
+    pshapes = _abstract_params(model, config.param_dtype)
+    mshapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, opt.moment_dtype), pshapes)
+    state_shapes = {
+        "params": pshapes,
+        "opt": {"m": mshapes, "v": mshapes,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+    mshard = jax.tree_util.tree_map(lambda s: s, pshard)
+    state_shard = {
+        "params": pshard,
+        "opt": {"m": mshard, "v": mshard, "step": NamedSharding(mesh, P())},
+    }
+    from repro.train.step import TrainState
+    state_shapes = TrainState(params=state_shapes["params"],
+                              opt=state_shapes["opt"])
+    state_shard = TrainState(params=state_shard["params"],
+                             opt=state_shard["opt"])
+
+    bshapes = input_specs(arch, shape.name)
+    bshard = _resolve_tree(bshapes, config, mesh, _batch_axes)
+
+    jitted = jax.jit(step,
+                     in_shardings=(state_shard, bshard),
+                     out_shardings=(state_shard, None),
+                     donate_argnums=(0,))
+    return jitted.lower(state_shapes, bshapes)
+
+
+def lower_prefill(arch: ArchSpec, shape, mesh) -> Any:
+    config = arch.config.for_serving()
+    model = build_model(config, mesh)
+    pshard = cm.shardings_for(model.param_specs(), config, mesh)
+    pshapes = _abstract_params(model, config.param_dtype)
+    bshapes = input_specs(arch, shape.name)
+    bshard = _resolve_tree(bshapes, config, mesh, _batch_axes)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    cache_shapes = jax.eval_shape(prefill, pshapes, bshapes)[1]
+    cshard = _cache_shardings(model, config, mesh, cache_shapes)
+    jitted = jax.jit(prefill,
+                     in_shardings=(pshard, bshard),
+                     out_shardings=(None, cshard))
+    return jitted.lower(pshapes, bshapes)
+
+
+def lower_decode(arch: ArchSpec, shape, mesh) -> Any:
+    config = arch.config.for_serving()
+    model = build_model(config, mesh)
+    pshard = cm.shardings_for(model.param_specs(), config, mesh)
+    pshapes = _abstract_params(model, config.param_dtype)
+    b = shape.global_batch
+    if config.family == "audio":
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len,
+                                     src_len=arch.src_frames))
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len))
+    cshard = _cache_shardings(model, config, mesh, cache_shapes)
+    tshapes = input_specs(arch, shape.name)["tokens"]
+    tshard = NamedSharding(
+        mesh, cm.resolve_spec(tshapes.shape, ("batch", None), mesh,
+                              cm.make_rules(config, mesh)))
+
+    def decode(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    jitted = jax.jit(decode,
+                     in_shardings=(pshard, tshard, cshard),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))
+    return jitted.lower(pshapes, tshapes, cache_shapes)
+
+
+def lower_contour(mesh, mesh_name: str) -> Any:
+    """The paper's workload: one distributed Contour solve, edge-sharded."""
+    from repro.core.distributed import distributed_contour_step_fn
+
+    edge_axes = ("pod", "data") if "pod2" in mesh_name else ("data",)
+    m = CONTOUR_N_EDGES
+    sds = jax.ShapeDtypeStruct((m,), jnp.int32)
+    # max_iters=8: Theorem-1 round budget for suite-scale diameters (Fig. 1
+    # shows C-2 <= 7 everywhere); the roofline's loop-aware cost model
+    # multiplies the while body by this trip count, so it must be the
+    # *expected* convergence rounds, not a runaway safety bound.
+    fn = lambda s, d: distributed_contour_step_fn(
+        s, d, CONTOUR_N_VERTICES, mesh, edge_axes=edge_axes, local_rounds=1,
+        max_iters=8)
+    spec = P(edge_axes if len(edge_axes) > 1 else edge_axes[0])
+    shard = NamedSharding(mesh, spec)
+    return jax.jit(fn, in_shardings=(shard, shard)).lower(sds, sds)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_name: str, shape_name: str, mesh_which: str,
+             out_dir: str, hw=None) -> Dict[str, Any]:
+    mesh, mesh_name = _mesh_and_name(mesh_which)
+    n_dev = mesh.size
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        if arch_name == "contour-cc":
+            lowered = lower_contour(mesh, mesh_name)
+            kind = "contour"
+            mf = 0.0
+            note = ("paper kernel: per-round work is O(m) scatter-min, "
+                    "MODEL_FLOPS n/a (memory/collective bound by design)")
+        else:
+            arch = get_arch(arch_name)
+            skip = arch.skip_reason(shape_name)
+            if skip:
+                rec.update(status="skipped", reason=skip)
+                _write(rec, out_dir)
+                return rec
+            shape = SHAPES[shape_name]
+            model = build_model(arch.config)
+            mf = model_flops(model, shape.kind, shape.seq_len,
+                             shape.global_batch)
+            note = ""
+            if shape.kind == "train":
+                lowered = lower_train(arch, shape, mesh)
+            elif shape.kind == "prefill":
+                lowered = lower_prefill(arch, shape, mesh)
+            else:
+                lowered = lower_decode(arch, shape, mesh)
+            kind = shape.kind
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        print(f"[{arch_name} | {shape_name} | {mesh_name}] memory_analysis:")
+        print(f"  {ma}")
+        report = analyze_compiled(
+            compiled, arch=arch_name, shape=shape_name, mesh_name=mesh_name,
+            kind=kind, n_devices=n_dev, model_flops_global=mf, note=note)
+        print(f"  cost_analysis flops/dev={report.hlo_flops:.3e} "
+              f"bytes/dev={report.hlo_bytes:.3e} "
+              f"coll_link_bytes/dev={report.collective_link_bytes:.3e}")
+        print(f"  roofline: compute={report.t_compute*1e3:.2f}ms "
+              f"memory={report.t_memory*1e3:.2f}ms "
+              f"collective={report.t_collective*1e3:.2f}ms "
+              f"-> dominant={report.dominant}")
+
+        rec.update(
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "code_bytes": ma.generated_code_size_in_bytes,
+                "peak_bytes": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+            },
+            roofline=report.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[{arch_name} | {shape_name} | {mesh_which}] FAILED: {e}")
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: Dict[str, Any], out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def all_cells():
+    for arch_name in list(ARCHS) + ["contour-cc"]:
+        shapes = list(SHAPES) if arch_name != "contour-cc" else ["graph_2e31"]
+        for shape_name in shapes:
+            yield arch_name, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a, s in all_cells():
+            print(a, s)
+        return
+
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape or "train_4k")])
+    n_ok = n_skip = n_err = 0
+    for arch_name, shape_name in cells:
+        for mw in meshes:
+            mesh_name = "pod1x16x16" if mw == "single" else "pod2x16x16"
+            path = os.path.join(
+                args.out, f"{arch_name}__{shape_name}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        continue
+            rec = run_cell(arch_name, shape_name, mw, args.out)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_err += rec["status"] == "error"
+    print(f"dry-run: ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Mesh construction is a FUNCTION (never a module-level constant) so merely
+importing this module can't touch jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before *any* jax
+initialisation, and tests/benches must keep seeing 1 device.
+
+Topology rationale (DESIGN.md §4): the ``pod`` axis only ever carries
+data-parallel all-reduces (DCN-tolerant); every tensor/expert-parallel
+collective stays on the ``model`` axis inside one pod's ICI.  That
+separation is what lets the same config scale past 2 pods to 1000+ nodes:
+adding pods adds only DCN all-reduce participants, never ICI pressure.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The assignment's production mesh: 16x16 single pod / 2x16x16 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(model_parallel: int = 1,
+                   devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """Best-effort (data, model) mesh over whatever devices exist locally.
+
+    Used by tests/examples on CPU (1..8 interpreted host devices)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    if n % model_parallel:
+        raise ValueError(f"{n} devices not divisible by tp={model_parallel}")
+    shape = (n // model_parallel, model_parallel)
+    dev = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(
+        dev, ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

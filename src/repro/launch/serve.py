@@ -1,0 +1,142 @@
+"""Batched serving driver: continuous-batching prefill + decode loop.
+
+A minimal but real serving runtime over the model zoo's prefill/decode
+surface: requests arrive with prompts, get prefilled into per-slot KV/state
+caches, and a fixed-width decode batch greedily samples until each request
+hits its token budget.  Slot reuse = continuous batching (new requests take
+freed slots between decode steps).
+
+Usage:
+  python -m repro.launch.serve --arch xlstm-125m --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # int32 tokens
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Slot-based continuous batching on top of prefill/decode_step.
+
+    The decode batch is fixed-width (``n_slots``); per-request caches are
+    prefilled one by one and stacked into the slot dimension.  This mirrors
+    the cache layout of the decode dry-run cells, so the serving path and
+    the production lowering agree.
+    """
+
+    def __init__(self, config, params=None, *, n_slots: int = 4,
+                 max_len: int = 256, rng_seed: int = 0):
+        self.config = config
+        self.model = build_model(config)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(rng_seed))
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill,
+                                static_argnames=("max_len",))
+
+    # -- single-request prefill -> slot cache ------------------------------
+    def _prefill_one(self, req: Request):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": tokens}
+        if self.config.frontend == "patch_stub":
+            n = min(self.config.n_frontend_tokens, tokens.shape[1])
+            batch["patch_embeds"] = jnp.zeros(
+                (1, n, self.config.d_model), jnp.float32)
+        if self.config.frontend == "audio_stub":
+            batch["frame_embeds"] = jnp.zeros(
+                (1, max(tokens.shape[1] // 2, 4), self.config.d_model),
+                jnp.float32)
+        logits, cache = self._prefill(self.params, batch,
+                                      max_len=self.max_len)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        return next_tok, cache
+
+    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Run all requests to completion; returns rid -> generated tokens."""
+        queue = list(requests)
+        active: List[Optional[Request]] = [None] * self.n_slots
+        caches: List[Any] = [None] * self.n_slots
+
+        def admit():
+            for s in range(self.n_slots):
+                if active[s] is None and queue:
+                    req = queue.pop(0)
+                    tok, cache = self._prefill_one(req)
+                    req.out_tokens.append(tok)
+                    active[s], caches[s] = req, cache
+                    if len(req.out_tokens) >= req.max_new_tokens:
+                        req.done = True
+                        active[s] = caches[s] = None
+
+        admit()
+        while any(a is not None for a in active) or queue:
+            # batched decode over occupied slots (slot-by-slot caches are
+            # decoded per-slot here; the production decode cell lowers the
+            # fully stacked version — same math, batch=slots)
+            for s in range(self.n_slots):
+                req = active[s]
+                if req is None:
+                    continue
+                last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+                logits, caches[s] = self._decode(self.params, last, caches[s])
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.out_tokens.append(tok)
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    active[s] = caches[s] = None
+            admit()
+        return {r.rid: r.out_tokens for r in requests}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    config = arch.smoke_config() if args.smoke else arch.config
+    server = BatchedServer(config, n_slots=args.slots,
+                           max_len=args.prompt_len + args.max_new)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, config.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.time()
+    out = server.serve(reqs)
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s)")
+    for rid, toks in sorted(out.items()):
+        print(f"  req {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

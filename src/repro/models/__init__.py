@@ -1,0 +1,4 @@
+from repro.models.common import ModelConfig, ParamSpec
+from repro.models.model import LM, Seq2Seq, build_model
+
+__all__ = ["ModelConfig", "ParamSpec", "LM", "Seq2Seq", "build_model"]

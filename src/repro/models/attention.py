@@ -1,0 +1,222 @@
+"""GQA attention with RoPE, chunked (flash-style) softmax, and KV cache.
+
+Three execution paths:
+  * ``attend_full``    — materialised scores; used for short sequences.
+  * ``attend_chunked`` — streaming softmax over KV blocks (scan), never
+    materialises the (T, T) score matrix; this is what keeps the 32k
+    prefill dry-run inside HBM.  Same math as FlashAttention, expressed at
+    the XLA level so it compiles on any backend; the Pallas kernel in
+    ``repro.kernels.flash_attention`` is the TPU-fused version of the same
+    loop (ops.py selects between them).
+  * ``attend_decode``  — one query position against a cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig, ParamSpec
+
+NEG_INF = -1e30
+
+
+def attention_specs(config: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or config.d_model
+    hd = config.hd
+    specs = {
+        "wq": ParamSpec((d, config.n_heads, hd), ("embed", "heads", None),
+                        scale=d ** -0.5),
+        "wk": ParamSpec((d, config.n_kv_heads, hd), ("embed", "kv_heads", None),
+                        scale=d ** -0.5),
+        "wv": ParamSpec((d, config.n_kv_heads, hd), ("embed", "kv_heads", None),
+                        scale=d ** -0.5),
+        "wo": ParamSpec((config.n_heads, hd, d), ("heads", None, "embed"),
+                        scale=(config.n_heads * hd) ** -0.5),
+    }
+    if config.use_qkv_bias:
+        specs["bq"] = ParamSpec((config.n_heads, hd), ("heads", None), "zeros")
+        specs["bk"] = ParamSpec((config.n_kv_heads, hd), ("kv_heads", None), "zeros")
+        specs["bv"] = ParamSpec((config.n_kv_heads, hd), ("kv_heads", None), "zeros")
+    return specs
+
+
+def _project_qkv(params, x, config: ModelConfig):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if config.use_qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _group_q(q, n_kv: int):
+    """(B,T,H,hd) -> (B,T,Hkv,G,hd): GQA groups without repeating K/V."""
+    b, t, h, hd = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, hd)
+
+
+def attend_full(q, k, v, *, causal: bool, q_offset: int = 0):
+    """q: (B,Tq,H,hd); k/v: (B,Tk,Hkv,hd), Hkv | H. Returns (B,Tq,H,hd).
+
+    Grouped einsums keep K/V at Hkv heads — no ``repeat`` materialisation
+    (a 4-8x activation saving for the kv<=8 GQA architectures).
+    """
+    b, tq, h, hd = q.shape
+    n_kv = k.shape[2]
+    scale = hd ** -0.5
+    qg = _group_q(q, n_kv)
+    logits = jnp.einsum("bqkgh,btkh->bkgqt", qg, k).astype(jnp.float32) * scale
+    if causal:
+        tk = k.shape[1]
+        qpos = jnp.arange(tq)[:, None] + q_offset
+        kpos = jnp.arange(tk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", w, v)
+    return out.reshape(b, tq, h, hd)
+
+
+def attend_chunked(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int):
+    """Streaming-softmax attention; O(q_chunk * kv_chunk) score memory.
+
+    q: (B,T,H,hd); k/v: (B,T,Hkv,hd). Requires T % chunk == 0 (config picks
+    divisors).  Same math as FlashAttention, expressed at the XLA level.
+    """
+    b, tq, h, hd = q.shape
+    tk, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    nq, nk = tq // q_chunk, tk // kv_chunk
+    scale = hd ** -0.5
+    qb = q.reshape(b, nq, q_chunk, n_kv, g, hd)
+    kb = k.reshape(b, nk, kv_chunk, n_kv, hd)
+    vb = v.reshape(b, nk, kv_chunk, n_kv, hd)
+
+    def kv_step(carry, blk):
+        m, l, acc = carry          # (b,nq,kv,g,qc,1), same, (...,qc,hd)
+        kj, vj, j = blk            # kj/vj: (b,kvc,kv,hd)
+        s = jnp.einsum("bnqkgh,btkh->bnkgqt", qb, kj).astype(jnp.float32) * scale
+        if causal:
+            qpos = (jnp.arange(nq)[:, None] * q_chunk + jnp.arange(q_chunk)[None, :])
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, None, :] <= qpos[:, :, None]     # (nq,qc,kvc)
+            s = jnp.where(mask[:, None, None, :, :][None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bnkgqt,btkh->bnkgqh", p.astype(q.dtype), vj
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nq, n_kv, g, q_chunk, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nq, n_kv, g, q_chunk, 1), jnp.float32)
+    a0 = jnp.zeros((b, nq, n_kv, g, q_chunk, hd), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)   # (nk, b, kvc, n_kv, hd)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, (m0, l0, a0), (kb_t, vb_t, jnp.arange(nk))
+    )
+    out = acc / jnp.maximum(l, 1e-30)          # (b,nq,kv,g,qc,hd)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, tq, h, hd)
+    return out.astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, max_len, Hkv, hd)
+    v: jax.Array
+    length: jax.Array   # int32 scalar: tokens currently valid
+
+
+def init_kv_cache(batch: int, max_len: int, config: ModelConfig, dtype) -> KVCache:
+    shape = (batch, max_len, config.n_kv_heads, config.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def attention_block(
+    params, x, config: ModelConfig, *,
+    positions=None, causal: bool = True,
+    cache: Optional[KVCache] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    """Full attention sub-block: project, rope, attend, out-project.
+
+    Modes:
+      * train/prefill (cache None): full-sequence causal attention; returns
+        (out, (k, v)) so prefill can build the cache.
+      * decode (cache given): append one (or a few) positions, attend over
+        cache; returns (out, new_cache).
+      * cross-attention (cross_kv given): encoder K/V precomputed.
+    """
+    b, t, _ = x.shape
+    rot = int(config.hd * config.rotary_pct)
+    if positions is None:
+        positions = jnp.arange(t)
+
+    if cross_kv is not None:
+        q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+        k, v = cross_kv
+        out = attend_full(q, k, v, causal=False)
+        new_state = None
+    elif cache is None:
+        q, k, v = _project_qkv(params, x, config)
+        if rot > 0:
+            cos, sin = cm.rope_angles(positions, rot, config.rope_theta)
+            q = cm.apply_rope(q, cos, sin)
+            k = cm.apply_rope(k, cos, sin)
+        # repeat_kv_math: archs whose kv head count doesn't divide the
+        # model axis (yi kv=4, nemo kv=8 vs 16-way TP) repeat K/V to full
+        # heads for the *compute* — the GQA grouped reshape (H -> Hkv x G)
+        # otherwise breaks the 16-way head sharding and GSPMD reshards
+        # every chunk step (measured 10x collective bytes on yi train).
+        # The cache still stores the compact Hkv form.
+        if config.repeat_kv_math and config.n_kv_heads != config.n_heads:
+            reps = config.n_heads // config.n_kv_heads
+            kf, vf = jnp.repeat(k, reps, axis=2), jnp.repeat(v, reps, axis=2)
+        else:
+            kf, vf = k, v
+        if t >= config.flash_block_threshold and t % config.attn_chunk_q == 0 \
+                and t % config.attn_chunk_kv == 0:
+            out = attend_chunked(
+                q, kf, vf, causal=causal,
+                q_chunk=config.attn_chunk_q, kv_chunk=config.attn_chunk_kv,
+            )
+        else:
+            out = attend_full(q, kf, vf, causal=causal)
+        new_state = (k, v)
+    else:
+        # decode: t new tokens (usually 1) against cache
+        q, k, v = _project_qkv(params, x, config)
+        pos = cache.length + jnp.arange(t)
+        if rot > 0:
+            cos, sin = cm.rope_angles(pos, rot, config.rope_theta)
+            q = cm.apply_rope(q, cos, sin)
+            k = cm.apply_rope(k, cos, sin)
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        n_kv = k_all.shape[2]
+        qg = _group_q(q, n_kv)
+        scale = config.hd ** -0.5
+        logits = jnp.einsum(
+            "bqkgh,btkh->bkgqt", qg, k_all.astype(q.dtype)
+        ).astype(jnp.float32) * scale
+        valid = jnp.arange(k_all.shape[1])[None, :] <= (
+            cache.length + jnp.arange(t))[:, None]
+        logits = jnp.where(valid[None, None, None, :, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqt,btkh->bqkgh", w, v_all.astype(q.dtype))
+        out = out.reshape(b, t, config.n_heads, config.hd)
+        new_state = KVCache(k=k_all, v=v_all, length=cache.length + t)
+
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    return y, new_state

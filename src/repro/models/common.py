@@ -1,0 +1,345 @@
+"""Shared model machinery: configs, sharding rules, norms, RoPE, init.
+
+Parameters are plain nested dicts of ``jax.Array``.  Every parameter leaf
+has a parallel *logical-axes* annotation (a tuple of logical axis names,
+one per dim) produced by the same constructor code path, so abstract
+(``jax.eval_shape``) and concrete initialisation can never diverge.
+Logical axes map to mesh axes through per-config rules (MaxText-style),
+with divisibility-aware fallback to replication (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+# Sharding profiles: logical axis -> candidate mesh axes (applied left to
+# right, each used at most once per array, only if it divides the dim).
+#
+#   tp      — Megatron tensor parallelism: batch over (pod, data); heads /
+#             ffn / vocab / experts over model; weights otherwise replicated.
+#             Right for models whose per-layer residual carries fit HBM.
+#   tp_sp   — tp + sequence-parallel residual stream (seq -> model).  The
+#             remat-saved per-layer residual shrinks by the model-axis size;
+#             GSPMD inserts the Megatron-SP all-gather / reduce-scatter pair
+#             around each block.  Needed for mid-size dense models (yi-6b,
+#             mistral-nemo-12b) whose 4k x 16-row residual carries blow HBM.
+#   fsdp    — flat batch over (pod, data, model); every weight is *storage*
+#             sharded (embed->data, ffn/heads->model) and gathered per layer.
+#             Right for big dense models (llava-34b) and for hybrids whose
+#             recurrent scan cannot be sequence-sharded (zamba2).
+#   ep      — MoE expert parallelism: experts->model, expert FFN inner dim
+#             storage-sharded over data, grouped local dispatch (see
+#             repro.models.mlp), attention as tp + embed->data storage.
+#   ep_fsdp — ep + flat batch for activation relief (arctic-480b).
+def _profile(batch, *, seq=(), embed=(), expert_inner=()):
+    return {
+        "batch": batch,
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "expert_inner": expert_inner,
+        "embed": embed,
+        "seq": seq,
+        "kv_seq": (),            # overridden when shard_cache_seq is set
+        "moe_group": ("pod", "data"),
+        "conv": ("model",),
+        "state": (),
+        "qkv": (),
+    }
+
+
+PROFILES: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    "tp": _profile(("pod", "data")),
+    "tp_sp": _profile(("pod", "data"), seq=("model",)),
+    # ep: expert weights are STATIONARY on their model rank (tokens move via
+    # the dispatch all-to-all, weights never do) — per-device expert memory
+    # = total_moe/model_size, so it requires the per-rank slice to fit HBM
+    # (deepseek-16b: yes, with bf16 params+moments).
+    "fsdp": _profile(("pod", "data", "model"), embed=("data",),
+                     expert_inner=("data",)),
+    "ep": _profile(("pod", "data"), embed=("data",), expert_inner=()),
+    # ep_fsdp: expert inner dim additionally storage-sharded over data and
+    # FSDP-gathered per layer.  Pays enormous weight-AG traffic; it is the
+    # only way 480B of expert weights fit a 256 x 16 GB pod at all (see
+    # EXPERIMENTS.md §Roofline for the honest accounting).
+    "ep_fsdp": _profile(("pod", "data", "model"), embed=("data",),
+                        expert_inner=("data",)),
+}
+
+DEFAULT_RULES = PROFILES["tp"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | ssm | hybrid | moe | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    # block flavour
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm | nonparametric
+    act: str = "silu"
+    mlp_gated: bool = True           # SwiGLU-style (gate ⊙ up) if True
+    rotary_pct: float = 1.0
+    rope_theta: float = 10_000.0
+    use_qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # MoE
+    moe_style: Optional[str] = None  # None | deepseek | arctic
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0
+    first_k_dense: int = 0
+    dense_d_ff: int = 0              # dense-layer/residual-FFN width
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    attn_every: int = 0              # zamba2: shared attn block period
+    slstm_every: int = 0             # xlstm: sLSTM block period (rest mLSTM)
+    # enc-dec
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # modality frontend stub
+    frontend: str = "none"           # none | patch_stub | audio_stub
+    n_frontend_tokens: int = 0       # e.g. image patches prepended
+    # numerics / memory
+    param_dtype: Any = jnp.float32
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"              # none | dots | full
+    vocab_pad_multiple: int = 256
+    max_seq_len: int = 131_072
+    # distribution (see PROFILES above)
+    sharding_profile: str = "tp"     # training profile
+    serve_profile: str = "tp"        # serving profile (no optimizer state)
+    shard_cache_seq: bool = False    # shard KV-cache seq dim over model axis
+                                     # (for archs whose kv_heads don't divide it)
+    repeat_kv_math: bool = False     # repeat K/V to full heads in train/
+                                     # prefill attention (TP-sharding-friendly
+                                     # when kv_heads don't divide the axis)
+    moe_groups: int = 1              # local-dispatch groups (= data shards)
+    # attention impl
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 1024
+    flash_block_threshold: int = 4096  # use chunked attn when seq >= this
+                                   # (4k train would otherwise materialise
+                                   #  (heads,4096,4096) fp32 score slabs)
+    # which schedule shapes are valid (assignment skip rules)
+    supports_decode: bool = True
+    supports_long_context: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def seq_parallel(self) -> bool:
+        return self.sharding_profile == "tp_sp"
+
+    def for_serving(self) -> "ModelConfig":
+        """Serving view: bf16 params, no remat, serve sharding profile."""
+        return self.replace(
+            sharding_profile=self.serve_profile,
+            param_dtype=jnp.bfloat16,
+            remat="none",
+        )
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param construction: shapes + logical axes + init, in one spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+
+def make_dense_spec(d_in: int, d_out: int, axes, scale=None) -> ParamSpec:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return ParamSpec((d_in, d_out), axes, "normal", scale)
+
+
+def init_param(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+
+
+def init_tree(key, specs, dtype):
+    """Initialise a pytree of ParamSpec into arrays (split keys by path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrs = [init_param(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_tree(specs, dtype):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_axes_tree(specs):
+    return jax.tree_util.tree_map(
+        lambda s: s.logical_axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh resolution
+# ---------------------------------------------------------------------------
+
+def resolve_spec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Dict[str, Tuple[str, ...]],
+) -> P:
+    """Map logical axes to a PartitionSpec, respecting divisibility."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    out = []
+    for dim, lname in zip(shape, logical_axes):
+        assigned = []
+        if lname is not None:
+            for ax in rules.get(lname, ()):  # candidates in priority order
+                if ax in used or ax not in mesh.shape:
+                    continue
+                size = mesh.shape[ax]
+                prod = int(np.prod([mesh.shape[a] for a in assigned])) if assigned else 1
+                if dim % (prod * size) == 0:
+                    assigned.append(ax)
+                    used.add(ax)
+        if not assigned:
+            out.append(None)
+        elif len(assigned) == 1:
+            out.append(assigned[0])
+        else:
+            out.append(tuple(assigned))
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def make_rules(config: ModelConfig, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    rules = dict(PROFILES[config.sharding_profile])
+    if config.shard_cache_seq:
+        # used-axis bookkeeping in resolve_spec guarantees kv_seq and
+        # kv_heads never both take the model axis on one array
+        rules["kv_seq"] = ("model",)
+    return rules
+
+
+def shardings_for(specs, config: ModelConfig, mesh: Mesh):
+    """Pytree of NamedSharding for a ParamSpec pytree."""
+    rules = make_rules(config, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, resolve_spec(s.shape, s.logical_axes, mesh, rules)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def constrain(x, mesh: Mesh, config: ModelConfig, *logical_axes):
+    """with_sharding_constraint by logical axis names (None = replicated)."""
+    rules = make_rules(config, mesh)
+    spec = resolve_spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def norm_params(config: ModelConfig, d: int) -> Dict[str, ParamSpec]:
+    if config.norm_type == "nonparametric":
+        return {}
+    p = {"scale": ParamSpec((d,), ("embed",), "ones")}
+    if config.norm_type == "layernorm":
+        p["bias"] = ParamSpec((d,), ("embed",), "zeros")
+    return p
+
+
+def apply_norm(x, params, config: ModelConfig, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if config.norm_type == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        x = x * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+        if config.norm_type == "layernorm":
+            x = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        # nonparametric (OLMo): no affine
+    return x.astype(dt)
+
+
+def activate(x, act: str):
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(act)
+
+
+def rope_angles(positions, rot_dim: int, theta: float):
+    """positions: int[...]; returns (cos, sin) with trailing dim rot_dim/2."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., rot_dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, T, H, hd); cos/sin: (T, rot/2) or (B, T, rot/2)."""
+    rot = cos.shape[-1] * 2
+    assert rot <= x.shape[-1]
+    if cos.ndim == 2:       # (T, r/2) -> (1, T, 1, r/2)
+        c, s = cos[None, :, None, :], sin[None, :, None, :]
+    else:                   # (B, T, r/2) -> (B, T, 1, r/2)
+        c, s = cos[:, :, None, :], sin[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    out1 = x1.astype(jnp.float32) * c - x2.astype(jnp.float32) * s
+    out2 = x2.astype(jnp.float32) * c + x1.astype(jnp.float32) * s
+    return jnp.concatenate(
+        [out1.astype(x.dtype), out2.astype(x.dtype), xp], axis=-1
+    )

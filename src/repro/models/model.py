@@ -1,0 +1,238 @@
+"""Model facade: embeddings, modality frontends, LM head, loss, serving.
+
+``build_model(config)`` returns an :class:`LM` (decoder-only; dense, MoE,
+SSM, hybrid and VLM families) or :class:`Seq2Seq` (audio enc-dec family).
+Both expose the same surface:
+
+  * ``param_specs()``          — pytree of ParamSpec
+  * ``init(rng)``              — concrete params
+  * ``loss(params, batch)``    — scalar LM loss (+ MoE aux)
+  * ``prefill(params, batch)`` — (last-position logits, cache)
+  * ``decode_step(params, tokens, cache)`` — (logits, cache)
+
+Batches are dicts of arrays; the modality frontends are stubs per the
+assignment: ``patch_embeds`` / ``frame_embeds`` arrive pre-computed at
+``d_model`` and pass through a learned projection.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, ParamSpec
+
+
+def _embed_specs(config: ModelConfig) -> Dict[str, ParamSpec]:
+    d, vp = config.d_model, config.padded_vocab
+    s = {"tok_embed": ParamSpec((vp, d), ("vocab", "embed"), scale=0.02)}
+    if not config.tie_embeddings:
+        s["lm_head"] = ParamSpec((d, vp), ("embed", "vocab"), scale=d ** -0.5)
+    if config.frontend == "patch_stub":
+        s["patch_proj"] = ParamSpec((d, d), ("embed", "embed"), scale=d ** -0.5)
+    if config.frontend == "audio_stub":
+        s["frame_proj"] = ParamSpec((d, d), ("embed", "embed"), scale=d ** -0.5)
+    return s
+
+
+def _logits(params, x, config: ModelConfig, mesh=None):
+    if config.tie_embeddings:
+        w = params["tok_embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = x @ w
+    if mesh is not None:
+        logits = cm.constrain(logits, mesh, config, "batch", None, "vocab")
+    # mask the vocab padding rows out of the softmax
+    if config.padded_vocab != config.vocab_size:
+        pad_mask = jnp.arange(config.padded_vocab) >= config.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+def softmax_xent(logits, labels, valid_mask=None):
+    """Vocab-sharding-friendly CE: one-hot reduction, no label gather."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    label_logit = jnp.sum(shifted * onehot, axis=-1)
+    nll = lse - label_logit
+    if valid_mask is not None:
+        nll = nll * valid_mask
+        return nll.sum() / jnp.maximum(valid_mask.sum(), 1.0)
+    return nll.mean()
+
+
+class LM:
+    """Decoder-only language model (dense / moe / ssm / hybrid / vlm)."""
+
+    def __init__(self, config: ModelConfig, mesh=None):
+        self.config = config
+        self.mesh = mesh
+        self.plan = tfm.layer_plan(config)
+
+    # -- parameters -------------------------------------------------------
+    def param_specs(self):
+        return {
+            "embed": _embed_specs(self.config),
+            "backbone": tfm.backbone_specs(self.config, self.plan),
+        }
+
+    def init(self, rng) -> Any:
+        return cm.init_tree(rng, self.param_specs(), self.config.param_dtype)
+
+    # -- shared input processing ------------------------------------------
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        config = self.config
+        tokens = batch["tokens"]
+        x = params["embed"]["tok_embed"].astype(config.dtype)[tokens]
+        if config.frontend == "patch_stub" and "patch_embeds" in batch:
+            p = batch["patch_embeds"].astype(config.dtype)
+            p = p @ params["embed"]["patch_proj"].astype(config.dtype)
+            n = p.shape[1]
+            x = jnp.concatenate([p, x[:, n:, :]], axis=1)   # patches prepend
+        if self.mesh is not None:
+            x = cm.constrain(x, self.mesh, config, "batch", "seq", "embed")
+        return x
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params, batch) -> tuple[jax.Array, Dict[str, jax.Array]]:
+        config = self.config
+        x = self._embed_inputs(params, batch)
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="train",
+            positions=jnp.arange(x.shape[1]), max_cache_len=0,
+        )
+        x, _, aux = tfm.backbone_apply(params["backbone"], x, ctx, plan=self.plan)
+        logits = _logits(params["embed"], x, config, self.mesh)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        ce = softmax_xent(logits, labels, mask)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, batch, max_len: int = 0):
+        """Build the cache; ``max_len`` reserves decode capacity beyond
+        the prompt (defaults to prompt length - no decode room)."""
+        config = self.config
+        x = self._embed_inputs(params, batch)
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="prefill",
+            positions=jnp.arange(x.shape[1]),
+            max_cache_len=max(max_len, x.shape[1]),
+        )
+        x, cache, _ = tfm.backbone_apply(params["backbone"], x, ctx, plan=self.plan)
+        logits = _logits(params["embed"], x[:, -1:, :], config, self.mesh)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        config = self.config
+        x = params["embed"]["tok_embed"].astype(config.dtype)[tokens]
+        if self.mesh is not None:
+            x = cm.constrain(x, self.mesh, config, "batch", None, "embed")
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="decode",
+            positions=None, max_cache_len=0,
+        )
+        x, cache, _ = tfm.backbone_apply(
+            params["backbone"], x, ctx, cache=cache, plan=self.plan
+        )
+        logits = _logits(params["embed"], x, config, self.mesh)
+        return logits, cache
+
+    def init_cache(self, batch: int, max_len: int):
+        return tfm.init_cache(self.config, batch, max_len, plan=self.plan)
+
+
+class Seq2Seq:
+    """Encoder-decoder LM (seamless backbone): audio-stub encoder + decoder."""
+
+    def __init__(self, config: ModelConfig, mesh=None):
+        self.config = config
+        self.mesh = mesh
+        n_enc = config.n_enc_layers or config.n_layers
+        n_dec = config.n_dec_layers or config.n_layers
+        self.enc_plan = tfm.LayerPlan((), ("enc_attn_mlp",), n_enc, None)
+        self.dec_plan = tfm.LayerPlan((), ("dec_block",), n_dec, None)
+
+    def param_specs(self):
+        return {
+            "embed": _embed_specs(self.config),
+            "encoder": tfm.backbone_specs(self.config, self.enc_plan),
+            "decoder": tfm.backbone_specs(self.config, self.dec_plan),
+        }
+
+    def init(self, rng):
+        return cm.init_tree(rng, self.param_specs(), self.config.param_dtype)
+
+    def encode(self, params, batch) -> jax.Array:
+        config = self.config
+        frames = batch["frame_embeds"].astype(config.dtype)
+        x = frames @ params["embed"]["frame_proj"].astype(config.dtype)
+        if self.mesh is not None:
+            x = cm.constrain(x, self.mesh, config, "batch", "seq", "embed")
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="train",
+            positions=jnp.arange(x.shape[1]), max_cache_len=0,
+        )
+        x, _, _ = tfm.backbone_apply(params["encoder"], x, ctx, plan=self.enc_plan)
+        return x
+
+    def _decode_embed(self, params, tokens):
+        return params["embed"]["tok_embed"].astype(self.config.dtype)[tokens]
+
+    def loss(self, params, batch):
+        config = self.config
+        enc_out = self.encode(params, batch)
+        x = self._decode_embed(params, batch["tokens"])
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="train",
+            positions=jnp.arange(x.shape[1]), max_cache_len=0, enc_out=enc_out,
+        )
+        x, _, _ = tfm.backbone_apply(params["decoder"], x, ctx, plan=self.dec_plan)
+        logits = _logits(params["embed"], x, config, self.mesh)
+        ce = softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+        return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+    def prefill(self, params, batch, max_len: int = 0):
+        config = self.config
+        enc_out = self.encode(params, batch)
+        x = self._decode_embed(params, batch["tokens"])
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="prefill",
+            positions=jnp.arange(x.shape[1]),
+            max_cache_len=max(max_len, x.shape[1]),
+            enc_out=enc_out,
+        )
+        x, cache, _ = tfm.backbone_apply(params["decoder"], x, ctx, plan=self.dec_plan)
+        logits = _logits(params["embed"], x[:, -1:, :], config, self.mesh)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        config = self.config
+        x = self._decode_embed(params, tokens)
+        ctx = tfm.BlockCtx(
+            config=config, mesh=self.mesh, mode="decode",
+            positions=None, max_cache_len=0,
+        )
+        x, cache, _ = tfm.backbone_apply(
+            params["decoder"], x, ctx, cache=cache, plan=self.dec_plan
+        )
+        logits = _logits(params["embed"], x, config, self.mesh)
+        return logits, cache
+
+    def init_cache(self, batch: int, max_len: int, src_len: int = 0):
+        return tfm.init_cache(self.config, batch, max_len, plan=self.dec_plan,
+                              src_len=src_len or max_len)
+
+
+def build_model(config: ModelConfig, mesh=None):
+    if config.family == "audio":
+        return Seq2Seq(config, mesh)
+    return LM(config, mesh)

@@ -1,0 +1,387 @@
+"""Linear-recurrence blocks: Mamba2 (SSD), xLSTM's mLSTM and sLSTM.
+
+One chunked gated-linear-attention core (``gla_chunked``) serves both SSD
+and mLSTM — Mamba-2's SSD *is* scalar-decay GLA with ``q=C, k=B, v=Δ·x,
+log_f=Δ·A`` (Dao & Gu 2024), and the mLSTM matrix memory is GLA plus a
+normaliser row.  The chunked form is the TPU-native adaptation: intra-chunk
+work is dense matmuls on the MXU, inter-chunk state is a short scan —
+instead of a length-T serial recurrence.
+
+sLSTM has a true hidden-to-gate recurrence (block-diagonal per head) and
+admits no parallel form (xLSTM paper §2.3); it is computed with a
+``lax.scan`` over time.
+
+Every block exposes a decode path carrying O(1)-per-token state — this is
+what makes the ``long_500k`` shape runnable for xlstm/zamba2 (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig, ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear attention (shared by SSD and mLSTM)
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q, k, v, log_f, *, chunk: int = 128, s0=None):
+    """Chunkwise-parallel scalar-gated linear attention.
+
+    q, k: (B, T, H, N); v: (B, T, H, P); log_f: (B, T, H) (<= 0).
+    Returns (out (B,T,H,P), final_state (B,H,N,P)).
+    Requires T % chunk == 0.
+    """
+    import math as _math
+
+    b, t, h, n = q.shape
+    p = v.shape[-1]
+    chunk = min(chunk, t)
+    if t % chunk:
+        chunk = _math.gcd(t, chunk)
+    nc = t // chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(b, nc, chunk, h, n)
+    kc = k.reshape(b, nc, chunk, h, n)
+    vc = v.reshape(b, nc, chunk, h, p)
+    fc = log_f.reshape(b, nc, chunk, h).astype(f32)
+    cum = jnp.cumsum(fc, axis=2)                     # (b,nc,c,h)
+    total = cum[:, :, -1]                            # (b,nc,h)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, p), f32)
+
+    def chunk_step(S, blk):
+        qj, kj, vj, cumj, totj = blk                  # (b,c,h,n) ...
+        # inter-chunk: q decayed from chunk start attends to carried state
+        q_scaled = qj.astype(f32) * jnp.exp(cumj)[..., None]
+        inter = jnp.einsum("bchn,bhnp->bchp", q_scaled, S)
+        # intra-chunk: masked decayed attention.  The mask is applied to
+        # the *exponent*: future (upper-triangle) entries have positive
+        # deltas (cum is decreasing), whose exp overflows and then NaNs
+        # the backward pass through an inf*0 product if masked only after
+        # exponentiation.
+        scores = jnp.einsum("bchn,bshn->bhcs", qj.astype(f32), kj.astype(f32))
+        ct = cumj.transpose(0, 2, 1)                   # (b,h,c)
+        delta = ct[:, :, :, None] - ct[:, :, None, :]  # (b,h,c,s)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        delta = jnp.where(mask[None, None], delta, -1e30)
+        a = scores * jnp.exp(delta)
+        intra = jnp.einsum("bhcs,bshp->bchp", a, vj.astype(f32))
+        # state update: decay old state to chunk end, add decayed kv outer
+        k_dec = kj.astype(f32) * jnp.exp(totj[:, None, :] - cumj)[..., None]
+        S_new = jnp.exp(totj)[:, :, None, None] * S + jnp.einsum(
+            "bshn,bshp->bhnp", k_dec, vj.astype(f32)
+        )
+        return S_new, inter + intra
+
+    blks = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(cum, 1, 0), jnp.moveaxis(total, 1, 0),
+    )
+    S, outs = jax.lax.scan(chunk_step, s0, blks)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, t, h, p)
+    return out.astype(v.dtype), S
+
+
+def gla_decode(q, k, v, log_f, state):
+    """Single-token GLA step. q/k: (B,H,N); v: (B,H,P); log_f: (B,H)."""
+    f32 = jnp.float32
+    f = jnp.exp(log_f.astype(f32))[:, :, None, None]
+    state = f * state + jnp.einsum("bhn,bhp->bhnp", k.astype(f32), v.astype(f32))
+    out = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), state)
+    return out.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba/xLSTM stem)
+# ---------------------------------------------------------------------------
+
+def conv1d_causal(x, w, b=None, state=None):
+    """x: (B,T,C); w: (W,C) depthwise. state: (B,W-1,C) carried for decode.
+
+    Returns (y (B,T,C), new_state (B,W-1,C)).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)           # (B, T+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    if b is not None:
+        y = y + b[None, None, :]
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, W-1, conv_channels)
+    ssd: jax.Array     # (B, H, N, P) fp32
+
+
+def mamba2_dims(config: ModelConfig):
+    d_in = config.ssm_expand * config.d_model
+    n = config.ssm_state
+    p = 64                                   # head dim (Mamba-2 default)
+    h = d_in // p
+    return d_in, n, p, h
+
+
+def mamba2_specs(config: ModelConfig) -> Dict[str, ParamSpec]:
+    d = config.d_model
+    d_in, n, p, h = mamba2_dims(config)
+    conv_ch = d_in + 2 * n
+    return {
+        "w_in": ParamSpec((d, 2 * d_in + 2 * n + h), ("embed", "ffn"),
+                          scale=d ** -0.5),
+        "conv_w": ParamSpec((config.ssm_conv, conv_ch), (None, "conv"), scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), ("conv",), "zeros"),
+        "a_log": ParamSpec((h,), (None,), "zeros"),
+        "dt_bias": ParamSpec((h,), (None,), "zeros"),
+        "d_skip": ParamSpec((h,), (None,), "ones"),
+        "norm_scale": ParamSpec((d_in,), ("ffn",), "ones"),
+        "w_out": ParamSpec((d_in, d), ("ffn", "embed"), scale=d_in ** -0.5),
+    }
+
+
+def _mamba2_project(params, x, config: ModelConfig):
+    d_in, n, p, h = mamba2_dims(config)
+    proj = x @ params["w_in"].astype(x.dtype)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt_raw, (d_in, n, p, h)
+
+
+def _mamba2_core(params, xbc_conv, dt_raw, dims, config, *, chunk, s0):
+    d_in, n, p, h = dims
+    bsz, t = xbc_conv.shape[:2]
+    xv, bmat, cmat = jnp.split(xbc_conv, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                  # (B,T,H)
+    log_f = -dt * jnp.exp(params["a_log"].astype(jnp.float32))
+    v = xv.reshape(bsz, t, h, p) * dt[..., None].astype(xv.dtype)
+    q = jnp.broadcast_to(cmat[:, :, None, :], (bsz, t, h, n))
+    k = jnp.broadcast_to(bmat[:, :, None, :], (bsz, t, h, n))
+    out, S = gla_chunked(q, k, v, log_f, chunk=chunk, s0=s0)
+    out = out + xv.reshape(bsz, t, h, p) * params["d_skip"].astype(xv.dtype)[None, None, :, None]
+    return out.reshape(bsz, t, d_in), S
+
+
+def mamba2_apply(params, x, config: ModelConfig, *, chunk: int = 128,
+                 state: Optional[SSMState] = None, return_state: bool = False):
+    """Training / prefill path. x: (B,T,d)."""
+    z, xbc, dt_raw, dims = _mamba2_project(params, x, config)
+    conv_state = state.conv if state is not None else None
+    xbc_c, conv_state = conv1d_causal(
+        xbc, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        conv_state,
+    )
+    xbc_c = jax.nn.silu(xbc_c)
+    s0 = state.ssd if state is not None else None
+    out, S = _mamba2_core(params, xbc_c, dt_raw, dims, config, chunk=chunk, s0=s0)
+    # gated RMS norm then down-projection
+    out = out * jax.lax.rsqrt(
+        jnp.mean(jnp.square(out.astype(jnp.float32)), -1, keepdims=True) + 1e-5
+    ).astype(out.dtype)
+    out = out * params["norm_scale"].astype(out.dtype) * jax.nn.silu(z)
+    y = out @ params["w_out"].astype(x.dtype)
+    if return_state:
+        return y, SSMState(conv=conv_state, ssd=S)
+    return y
+
+
+def mamba2_decode(params, x, config: ModelConfig, state: SSMState):
+    """x: (B,1,d); O(1) state update."""
+    y, new_state = mamba2_apply(
+        params, x, config, chunk=1, state=state, return_state=True
+    )
+    return y, new_state
+
+
+def mamba2_init_state(batch: int, config: ModelConfig, dtype) -> SSMState:
+    d_in, n, p, h = mamba2_dims(config)
+    return SSMState(
+        conv=jnp.zeros((batch, config.ssm_conv - 1, d_in + 2 * n), dtype),
+        ssd=jnp.zeros((batch, h, n, p), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(config: ModelConfig):
+    d_in = 2 * config.d_model            # proj factor 2 (xLSTM paper)
+    h = config.n_heads
+    p = d_in // h
+    return d_in, h, p
+
+
+def mlstm_specs(config: ModelConfig) -> Dict[str, ParamSpec]:
+    d = config.d_model
+    d_in, h, p = mlstm_dims(config)
+    return {
+        "w_up": ParamSpec((d, 2 * d_in), ("embed", "ffn"),
+                          scale=d ** -0.5),   # x_in, z
+        "conv_w": ParamSpec((config.ssm_conv, d_in), (None, "conv"), scale=0.5),
+        "conv_b": ParamSpec((d_in,), ("conv",), "zeros"),
+        "w_q": ParamSpec((d_in, d_in), ("ffn", None), scale=d_in ** -0.5),
+        "w_k": ParamSpec((d_in, d_in), ("ffn", None), scale=d_in ** -0.5),
+        "w_v": ParamSpec((d_in, d_in), ("ffn", None), scale=d_in ** -0.5),
+        "w_if": ParamSpec((d_in, 2 * h), ("ffn", None), scale=0.02),
+        "b_if": ParamSpec((2 * h,), (None,), "zeros"),
+        "norm_scale": ParamSpec((d_in,), ("ffn",), "ones"),
+        "w_down": ParamSpec((d_in, d), ("ffn", "embed"), scale=d_in ** -0.5),
+    }
+
+
+def _mlstm_qkv(params, x, config: ModelConfig, conv_state):
+    d_in, h, p = mlstm_dims(config)
+    up = x @ params["w_up"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_c, conv_state = conv1d_causal(
+        x_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        conv_state,
+    )
+    x_c = jax.nn.silu(x_c)
+    bsz, t = x.shape[:2]
+    q = (x_c @ params["w_q"].astype(x.dtype)).reshape(bsz, t, h, p) * (p ** -0.5)
+    k = (x_c @ params["w_k"].astype(x.dtype)).reshape(bsz, t, h, p)
+    v = (x_in @ params["w_v"].astype(x.dtype)).reshape(bsz, t, h, p)
+    gates = x_c @ params["w_if"].astype(x.dtype) + params["b_if"].astype(x.dtype)
+    i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,T,H)
+    # log-sigmoid forget gate; sigmoid input gate folded into k (bounded
+    # stand-in for xLSTM's exponential gating — see module docstring).
+    log_f = jax.nn.log_sigmoid(f_raw)
+    k = k * jax.nn.sigmoid(i_raw)[..., None].astype(k.dtype)
+    return q, k, v, log_f, z, conv_state, (d_in, h, p)
+
+
+def _mlstm_finish(params, out, norm_w, z, x, d_in):
+    # per-head RMS norm, gate by silu(z), down-project
+    out = out * jax.lax.rsqrt(
+        jnp.mean(jnp.square(out.astype(jnp.float32)), -1, keepdims=True) + 1e-5
+    ).astype(out.dtype)
+    bsz, t = out.shape[:2]
+    out = out.reshape(bsz, t, d_in) * norm_w
+    out = out * jax.nn.silu(z)
+    return out @ params["w_down"].astype(x.dtype)
+
+
+def mlstm_apply(params, x, config: ModelConfig, *, chunk: int = 128,
+                state: Optional[SSMState] = None, return_state: bool = False):
+    conv_state = state.conv if state is not None else None
+    q, k, v, log_f, z, conv_state, (d_in, h, p) = _mlstm_qkv(
+        params, x, config, conv_state
+    )
+    # normaliser: append a ones column to v, divide at the end (mLSTM n_t)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    s0 = state.ssd if state is not None else None
+    out_aug, S = gla_chunked(q, k, v_aug, log_f, chunk=chunk, s0=s0)
+    num, den = out_aug[..., :p], out_aug[..., p:]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = _mlstm_finish(params, out, params["norm_scale"].astype(x.dtype), z, x, d_in)
+    if return_state:
+        return y, SSMState(conv=conv_state, ssd=S)
+    return y
+
+
+def mlstm_decode(params, x, config: ModelConfig, state: SSMState):
+    return mlstm_apply(params, x, config, chunk=1, state=state, return_state=True)
+
+
+def mlstm_init_state(batch: int, config: ModelConfig, dtype) -> SSMState:
+    d_in, h, p = mlstm_dims(config)
+    return SSMState(
+        conv=jnp.zeros((batch, config.ssm_conv - 1, d_in), dtype),
+        ssd=jnp.zeros((batch, h, p, p + 1), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — true recurrence, lax.scan over time
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B,H,hd) fp32
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array   # stabiliser
+
+
+def slstm_dims(config: ModelConfig):
+    h = config.n_heads
+    hd = config.d_model // h
+    return h, hd
+
+
+def slstm_specs(config: ModelConfig) -> Dict[str, ParamSpec]:
+    d = config.d_model
+    h, hd = slstm_dims(config)
+    return {
+        "w_gates": ParamSpec((d, 4, h, hd), ("embed", None, "heads", None), scale=0.02),
+        "r_gates": ParamSpec((4, h, hd, hd), (None, "heads", None, None), scale=0.02),
+        "b_gates": ParamSpec((4, h, hd), (None, "heads", None), "zeros"),
+        "norm_scale": ParamSpec((d,), ("embed",), "ones"),
+        "w_down": ParamSpec((d, d), ("embed", "embed"), scale=d ** -0.5),
+    }
+
+
+def _slstm_cell(params, wx_t, state: SLSTMState):
+    """wx_t: (B,4,H,hd) precomputed input projections for one step."""
+    f32 = jnp.float32
+    rh = jnp.einsum("bhd,ghde->bghe", state.h, params["r_gates"].astype(f32))
+    g = wx_t.astype(f32) + rh + params["b_gates"].astype(f32)[None]
+    z_t = jnp.tanh(g[:, 0])
+    i_t = g[:, 1]
+    f_t = g[:, 2]
+    o_t = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(f_t + state.m, i_t)            # stabiliser
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + state.m - m_new)
+    c_new = f_p * state.c + i_p * z_t
+    n_new = f_p * state.n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(h=h_new, c=c_new, n=n_new, m=m_new)
+
+
+def slstm_apply(params, x, config: ModelConfig, *,
+                state: Optional[SLSTMState] = None, return_state: bool = False):
+    bsz, t, d = x.shape
+    h, hd = slstm_dims(config)
+    if state is None:
+        z = jnp.zeros((bsz, h, hd), jnp.float32)
+        state = SLSTMState(h=z, c=z, n=z, m=jnp.full_like(z, -1e30))
+    wx = jnp.einsum("btd,dghe->btghe", x, params["w_gates"].astype(x.dtype))
+
+    def step(s, wx_t):
+        s_new = _slstm_cell(params, wx_t, s)
+        return s_new, s_new.h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(bsz, t, d).astype(x.dtype)
+    out = out * params["norm_scale"].astype(x.dtype)
+    y = out @ params["w_down"].astype(x.dtype)
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_decode(params, x, config: ModelConfig, state: SLSTMState):
+    return slstm_apply(params, x, config, state=state, return_state=True)
+
+
+def slstm_init_state(batch: int, config: ModelConfig) -> SLSTMState:
+    h, hd = slstm_dims(config)
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return SLSTMState(h=z, c=z, n=z, m=jnp.full_like(z, -1e30))

@@ -1,0 +1,580 @@
+"""Decoder-only LM assembly: block registry, layer plan, scan-over-layers.
+
+Every architecture is expressed as a *layer plan*: an optional unrolled
+``prefix`` (e.g. DeepSeek-MoE's first dense layer), a repeating ``unit`` of
+block types scanned ``n_repeat`` times (params stacked on a leading layer
+axis — keeps HLO size O(unit) instead of O(layers), essential for the
+480B-compile), and an optional ``shared`` block applied after each unit
+repetition with *unshared-cache/shared-weights* semantics (Zamba2's shared
+attention).  Remat wraps the unit body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import ModelConfig, ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+class LayerPlan(NamedTuple):
+    prefix: Tuple[str, ...]    # unrolled leading blocks
+    unit: Tuple[str, ...]      # repeated block pattern (params stacked)
+    n_repeat: int
+    shared: Optional[str]      # block applied after each unit repetition
+
+
+def layer_plan(config: ModelConfig) -> LayerPlan:
+    L = config.n_layers
+    if config.family in ("dense", "vlm"):
+        return LayerPlan((), ("attn_mlp",), L, None)
+    if config.family == "moe":
+        k = config.first_k_dense
+        return LayerPlan(("attn_dense_mlp",) * k, ("attn_moe",), L - k, None)
+    if config.family == "ssm":           # xLSTM
+        se = config.slstm_every
+        if se > 0:
+            assert L % se == 0
+            unit = ("mlstm",) * (se - 1) + ("slstm",)
+            return LayerPlan((), unit, L // se, None)
+        return LayerPlan((), ("mlstm",), L, None)
+    if config.family == "hybrid":        # Zamba2
+        ae = config.attn_every
+        assert ae > 0 and L % ae == 0
+        shared = "shared_attn_mlp" if config.d_ff > 0 else "shared_attn"
+        return LayerPlan((), ("mamba",) * ae, L // ae, shared)
+    raise ValueError(config.family)
+
+
+# ---------------------------------------------------------------------------
+# Block registry: specs(config) and apply(params, x, ctx) per block type
+# ---------------------------------------------------------------------------
+
+class BlockCtx(NamedTuple):
+    config: ModelConfig
+    mesh: Optional[Any]
+    mode: str                  # train | prefill | decode
+    positions: Optional[jax.Array]
+    max_cache_len: int
+    enc_out: Optional[jax.Array] = None   # encoder memory (enc-dec models)
+
+
+def _attn_mlp_specs(config: ModelConfig, dense_ff: bool = False):
+    d_ff = config.dense_d_ff if dense_ff and config.dense_d_ff else config.d_ff
+    return {
+        "ln_attn": cm.norm_params(config, config.d_model),
+        "attn": attn.attention_specs(config),
+        "ln_mlp": cm.norm_params(config, config.d_model),
+        "mlp": mlp_mod.mlp_specs(config, d_ff=d_ff),
+    }
+
+
+def _pad_cache_len(k, max_len: int):
+    """Grow the cache seq dim to capacity (prefill must leave decode room)."""
+    pad = max_len - k.shape[1]
+    if pad <= 0:
+        return k
+    return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def _apply_attn(params, x, ctx: BlockCtx, cache):
+    config = ctx.config
+    h = cm.apply_norm(x, params["ln_attn"], config)
+    if ctx.mode == "train":
+        out, _ = attn.attention_block(
+            params["attn"], h, config, positions=ctx.positions, cache=None
+        )
+        new_cache = None
+    elif ctx.mode == "prefill":
+        out, (k, v) = attn.attention_block(
+            params["attn"], h, config, positions=ctx.positions, cache=None
+        )
+        new_cache = attn.KVCache(
+            k=_pad_cache_len(k.astype(config.dtype), ctx.max_cache_len),
+            v=_pad_cache_len(v.astype(config.dtype), ctx.max_cache_len),
+            length=jnp.int32(x.shape[1]),
+        )
+    else:  # decode
+        out, new_cache = attn.attention_block(params["attn"], h, config, cache=cache)
+    return x + out, new_cache
+
+
+def _apply_attn_mlp(params, x, ctx: BlockCtx, cache):
+    x, new_cache = _apply_attn(params, x, ctx, cache)
+    h = cm.apply_norm(x, params["ln_mlp"], ctx.config)
+    x = x + mlp_mod.mlp_apply(params["mlp"], h, ctx.config)
+    return x, new_cache, jnp.float32(0.0)
+
+
+def _attn_moe_specs(config: ModelConfig):
+    return {
+        "ln_attn": cm.norm_params(config, config.d_model),
+        "attn": attn.attention_specs(config),
+        "ln_mlp": cm.norm_params(config, config.d_model),
+        "moe": mlp_mod.moe_specs(config),
+    }
+
+
+def _apply_attn_moe(params, x, ctx: BlockCtx, cache):
+    x, new_cache = _apply_attn(params, x, ctx, cache)
+    h = cm.apply_norm(x, params["ln_mlp"], ctx.config)
+    y, aux = mlp_mod.moe_apply(params["moe"], h, ctx.config, mesh=ctx.mesh)
+    return x + y, new_cache, aux
+
+
+def _mamba_specs(config: ModelConfig):
+    return {
+        "ln": cm.norm_params(config, config.d_model),
+        "mamba": ssm_mod.mamba2_specs(config),
+    }
+
+
+def _apply_mamba(params, x, ctx: BlockCtx, cache):
+    config = ctx.config
+    h = cm.apply_norm(x, params["ln"], config)
+    if ctx.mode == "train":
+        y = ssm_mod.mamba2_apply(params["mamba"], h, config)
+        new_cache = None
+    elif ctx.mode == "prefill":
+        y, new_cache = ssm_mod.mamba2_apply(
+            params["mamba"], h, config, return_state=True
+        )
+    else:
+        y, new_cache = ssm_mod.mamba2_decode(params["mamba"], h, config, cache)
+    return x + y, new_cache, jnp.float32(0.0)
+
+
+def _mlstm_specs(config: ModelConfig):
+    return {
+        "ln": cm.norm_params(config, config.d_model),
+        "mlstm": ssm_mod.mlstm_specs(config),
+    }
+
+
+def _apply_mlstm(params, x, ctx: BlockCtx, cache):
+    config = ctx.config
+    h = cm.apply_norm(x, params["ln"], config)
+    if ctx.mode == "train":
+        y = ssm_mod.mlstm_apply(params["mlstm"], h, config)
+        new_cache = None
+    elif ctx.mode == "prefill":
+        y, new_cache = ssm_mod.mlstm_apply(
+            params["mlstm"], h, config, return_state=True
+        )
+    else:
+        y, new_cache = ssm_mod.mlstm_decode(params["mlstm"], h, config, cache)
+    return x + y, new_cache, jnp.float32(0.0)
+
+
+def _slstm_specs(config: ModelConfig):
+    return {
+        "ln": cm.norm_params(config, config.d_model),
+        "slstm": ssm_mod.slstm_specs(config),
+    }
+
+
+def _apply_slstm(params, x, ctx: BlockCtx, cache):
+    config = ctx.config
+    h = cm.apply_norm(x, params["ln"], config)
+    if ctx.mode == "train":
+        y = ssm_mod.slstm_apply(params["slstm"], h, config)
+        new_cache = None
+    else:
+        y, new_cache = ssm_mod.slstm_apply(
+            params["slstm"], h, config,
+            state=None if ctx.mode == "prefill" else cache,
+            return_state=True,
+        )
+    return x + y, new_cache, jnp.float32(0.0)
+
+
+def _shared_attn_specs(config: ModelConfig):
+    return {
+        "ln": cm.norm_params(config, config.d_model),
+        "attn": attn.attention_specs(config),
+    }
+
+
+def _apply_shared_attn(params, x, ctx: BlockCtx, cache):
+    x, new_cache = _apply_attn(
+        {"ln_attn": params["ln"], "attn": params["attn"]}, x, ctx, cache
+    )
+    return x, new_cache, jnp.float32(0.0)
+
+
+def _shared_attn_mlp_specs(config: ModelConfig):
+    """Zamba2-style shared transformer block: attention + MLP, one set of
+    weights applied after every unit repetition (caches stay per-use)."""
+    return _attn_mlp_specs(config)
+
+
+def _apply_shared_attn_mlp(params, x, ctx: BlockCtx, cache):
+    x, new_cache, aux = _apply_attn_mlp(params, x, ctx, cache)
+    return x, new_cache, aux
+
+
+def _enc_attn_mlp_specs(config: ModelConfig):
+    return _attn_mlp_specs(config)
+
+
+def _apply_enc_attn_mlp(params, x, ctx: BlockCtx, cache):
+    """Bidirectional encoder block — never cached."""
+    config = ctx.config
+    h = cm.apply_norm(x, params["ln_attn"], config)
+    out, _ = attn.attention_block(
+        params["attn"], h, config, positions=ctx.positions, causal=False, cache=None
+    )
+    x = x + out
+    h = cm.apply_norm(x, params["ln_mlp"], config)
+    x = x + mlp_mod.mlp_apply(params["mlp"], h, config)
+    return x, None, jnp.float32(0.0)
+
+
+def _dec_block_specs(config: ModelConfig):
+    return {
+        "ln_self": cm.norm_params(config, config.d_model),
+        "self_attn": attn.attention_specs(config),
+        "ln_cross": cm.norm_params(config, config.d_model),
+        "cross_attn": attn.attention_specs(config),
+        "ln_mlp": cm.norm_params(config, config.d_model),
+        "mlp": mlp_mod.mlp_specs(config),
+    }
+
+
+def _cross_kv(params, enc_out, config: ModelConfig):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, params["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def _apply_dec_block(params, x, ctx: BlockCtx, cache):
+    """Decoder block: causal self-attn (cached) + cross-attn + MLP.
+
+    Cache layout: {"self": KVCache, "cross_k": ..., "cross_v": ...} — the
+    cross K/V are computed once from the encoder memory at prefill and
+    reused every decode step.
+    """
+    config = ctx.config
+    h = cm.apply_norm(x, params["ln_self"], config)
+    if ctx.mode == "train":
+        out, _ = attn.attention_block(
+            params["self_attn"], h, config, positions=ctx.positions, cache=None
+        )
+        self_cache = None
+    elif ctx.mode == "prefill":
+        out, (k, v) = attn.attention_block(
+            params["self_attn"], h, config, positions=ctx.positions, cache=None
+        )
+        self_cache = attn.KVCache(
+            k=_pad_cache_len(k.astype(config.dtype), ctx.max_cache_len),
+            v=_pad_cache_len(v.astype(config.dtype), ctx.max_cache_len),
+            length=jnp.int32(x.shape[1]),
+        )
+    else:
+        out, self_cache = attn.attention_block(
+            params["self_attn"], h, config, cache=cache["self"]
+        )
+    x = x + out
+
+    h = cm.apply_norm(x, params["ln_cross"], config)
+    if ctx.mode == "decode":
+        ck, cv = cache["cross_k"].astype(h.dtype), cache["cross_v"].astype(h.dtype)
+    else:
+        ck, cv = _cross_kv(params["cross_attn"], ctx.enc_out, config)
+    out, _ = attn.attention_block(
+        params["cross_attn"], h, config, cross_kv=(ck, cv)
+    )
+    x = x + out
+
+    h = cm.apply_norm(x, params["ln_mlp"], config)
+    x = x + mlp_mod.mlp_apply(params["mlp"], h, config)
+    if ctx.mode == "train":
+        return x, None, jnp.float32(0.0)
+    new_cache = {
+        "self": self_cache,
+        "cross_k": ck.astype(config.dtype),
+        "cross_v": cv.astype(config.dtype),
+    }
+    return x, new_cache, jnp.float32(0.0)
+
+
+BLOCKS = {
+    "attn_mlp": (_attn_mlp_specs, _apply_attn_mlp),
+    "enc_attn_mlp": (_enc_attn_mlp_specs, _apply_enc_attn_mlp),
+    "dec_block": (_dec_block_specs, _apply_dec_block),
+    "attn_dense_mlp": (
+        functools.partial(_attn_mlp_specs, dense_ff=True), _apply_attn_mlp),
+    "attn_moe": (_attn_moe_specs, _apply_attn_moe),
+    "mamba": (_mamba_specs, _apply_mamba),
+    "mlstm": (_mlstm_specs, _apply_mlstm),
+    "slstm": (_slstm_specs, _apply_slstm),
+    "shared_attn": (_shared_attn_specs, _apply_shared_attn),
+    "shared_attn_mlp": (_shared_attn_mlp_specs, _apply_shared_attn_mlp),
+}
+
+_HAS_CACHE = {"attn_mlp", "attn_dense_mlp", "attn_moe", "mamba", "mlstm",
+              "slstm", "shared_attn", "shared_attn_mlp"}
+_ATTN_BLOCKS = {"attn_mlp", "attn_dense_mlp", "attn_moe", "shared_attn",
+                "shared_attn_mlp"}
+
+
+def _stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec((n,) + spec.shape, (None,) + spec.logical_axes,
+                     spec.init, spec.scale)
+
+
+def _stack_tree(specs, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: _stack_spec(s, n), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_block_cache(btype: str, batch: int, max_len: int, config: ModelConfig,
+                     src_len: int = 0):
+    if btype in _ATTN_BLOCKS:
+        return attn.init_kv_cache(batch, max_len, config, config.dtype)
+    if btype == "dec_block":
+        kv_shape = (batch, src_len, config.n_kv_heads, config.hd)
+        return {
+            "self": attn.init_kv_cache(batch, max_len, config, config.dtype),
+            "cross_k": jnp.zeros(kv_shape, config.dtype),
+            "cross_v": jnp.zeros(kv_shape, config.dtype),
+        }
+    if btype == "mamba":
+        return ssm_mod.mamba2_init_state(batch, config, config.dtype)
+    if btype == "mlstm":
+        return ssm_mod.mlstm_init_state(batch, config, config.dtype)
+    if btype == "slstm":
+        return ssm_mod.slstm_init_state(batch, config)
+    raise ValueError(btype)
+
+
+class Ax:
+    """Logical-axes annotation wrapper.
+
+    Deliberately *not* a pytree container so an axes pytree can be zipped
+    against a cache pytree of arrays with ``tree_map`` (a plain tuple leaf
+    would be flattened into the structure and break the zip).
+    """
+
+    def __init__(self, *axes):
+        self.axes = axes
+
+    def __repr__(self):
+        return f"Ax{self.axes}"
+
+    def __eq__(self, other):
+        return isinstance(other, Ax) and self.axes == other.axes
+
+
+def block_cache_axes(btype: str, config: ModelConfig):
+    """Logical axes for one block's cache, mirroring init_block_cache.
+
+    KV caches carry ("batch", "kv_seq", "kv_heads", None): with
+    ``shard_cache_seq`` the seq dim takes the model axis (for archs whose
+    kv head count doesn't divide it); otherwise kv_heads does —
+    resolve_spec's used-axis bookkeeping makes the two mutually exclusive.
+    """
+    kv = Ax("batch", "kv_seq", "kv_heads", None)
+    if btype in _ATTN_BLOCKS:
+        return attn.KVCache(k=kv, v=kv, length=Ax())
+    if btype == "dec_block":
+        cross = Ax("batch", None, "kv_heads", None)
+        return {
+            "self": attn.KVCache(k=kv, v=kv, length=Ax()),
+            "cross_k": cross,
+            "cross_v": cross,
+        }
+    if btype == "mamba":
+        return ssm_mod.SSMState(conv=Ax("batch", None, "ffn"),
+                                ssd=Ax("batch", "heads", None, None))
+    if btype == "mlstm":
+        return ssm_mod.SSMState(conv=Ax("batch", None, "ffn"),
+                                ssd=Ax("batch", "heads", None, None))
+    if btype == "slstm":
+        s = Ax("batch", "heads", None)
+        return ssm_mod.SLSTMState(h=s, c=s, n=s, m=s)
+    raise ValueError(btype)
+
+
+def cache_axes(config: ModelConfig, plan: Optional[LayerPlan] = None):
+    """Logical-axes pytree matching ``init_cache`` (Ax leaves)."""
+    plan = plan or layer_plan(config)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: Ax(None, *a.axes), tree,
+            is_leaf=lambda x: isinstance(x, Ax),
+        )
+
+    axes = {
+        "prefix": [block_cache_axes(b, config) for b in plan.prefix],
+        "unit": [stack(block_cache_axes(b, config)) for b in plan.unit],
+    }
+    if plan.shared is not None:
+        axes["shared"] = stack(block_cache_axes(plan.shared, config))
+    return axes
+
+
+def cache_shardings(config: ModelConfig, mesh, plan: Optional[LayerPlan] = None):
+    """NamedSharding pytree for the model cache (zip with an eval_shape)."""
+    from jax.sharding import NamedSharding
+
+    plan = plan or layer_plan(config)
+    rules = cm.make_rules(config, mesh)
+    axes = cache_axes(config, plan)
+    return jax.tree_util.tree_map(
+        lambda a: _AxResolver(a, mesh, rules), axes,
+        is_leaf=lambda x: isinstance(x, Ax),
+    )
+
+
+class _AxResolver:
+    """Deferred sharding: resolves logical axes against a concrete shape.
+
+    ``cache_shardings`` can't produce NamedShardings directly because
+    divisibility depends on array shapes; the dry-run zips this resolver
+    tree against an ``eval_shape`` of the cache.
+    """
+
+    def __init__(self, ax: "Ax", mesh, rules):
+        self.ax, self.mesh, self.rules = ax, mesh, rules
+
+    def resolve(self, shape):
+        from jax.sharding import NamedSharding
+
+        axes = self.ax.axes
+        if len(axes) != len(shape):   # scalar length fields etc.
+            axes = (None,) * len(shape)
+        return NamedSharding(
+            self.mesh, cm.resolve_spec(shape, axes, self.mesh, self.rules)
+        )
+
+
+def resolve_cache_shardings(resolvers, cache_shapes):
+    """Zip an _AxResolver tree with a ShapeDtypeStruct tree."""
+    return jax.tree_util.tree_map(
+        lambda r, s: r.resolve(s.shape), resolvers, cache_shapes,
+        is_leaf=lambda x: isinstance(x, _AxResolver),
+    )
+
+
+def init_cache(config: ModelConfig, batch: int, max_len: int,
+               plan: Optional[LayerPlan] = None, src_len: int = 0):
+    """Full-model cache pytree matching the layer plan."""
+    plan = plan or layer_plan(config)
+    cache = {
+        "prefix": [init_block_cache(b, batch, max_len, config, src_len)
+                   for b in plan.prefix],
+        "unit": [
+            jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (plan.n_repeat,) + x.shape),
+                init_block_cache(b, batch, max_len, config, src_len),
+            )
+            for b in plan.unit
+        ],
+    }
+    if plan.shared is not None:
+        cache["shared"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (plan.n_repeat,) + x.shape),
+            init_block_cache(plan.shared, batch, max_len, config),
+        )
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Backbone specs / apply
+# ---------------------------------------------------------------------------
+
+def backbone_specs(config: ModelConfig,
+                   plan: Optional[LayerPlan] = None) -> Dict[str, Any]:
+    plan = plan or layer_plan(config)
+    specs: Dict[str, Any] = {
+        "prefix": [BLOCKS[b][0](config) for b in plan.prefix],
+        "unit": [_stack_tree(BLOCKS[b][0](config), plan.n_repeat) for b in plan.unit],
+        "final_norm": cm.norm_params(config, config.d_model),
+    }
+    if plan.shared is not None:
+        specs["shared"] = BLOCKS[plan.shared][0](config)
+    return specs
+
+
+def backbone_apply(params, x, ctx: BlockCtx, cache=None,
+                   plan: Optional[LayerPlan] = None):
+    """Run all layers. Returns (x, new_cache, aux_loss_sum)."""
+    config = ctx.config
+    plan = plan or layer_plan(config)
+    new_cache: Dict[str, Any] = {"prefix": [], "unit": None}
+    aux_total = jnp.float32(0.0)
+    use_cache = ctx.mode != "train"
+
+    for i, btype in enumerate(plan.prefix):
+        c_in = cache["prefix"][i] if use_cache and cache else None
+        x, c_out, aux = BLOCKS[btype][1](params["prefix"][i], x, ctx, c_in)
+        aux_total = aux_total + aux
+        new_cache["prefix"].append(c_out)
+
+    # Residual-stream constraint between layers: anchors the batch (and,
+    # under tp_sp, the sequence) sharding at every scan step so the remat-
+    # saved per-layer carry is stored sharded — this is where the tp_sp /
+    # fsdp profiles realise their activation-memory win.
+    def _anchor(x):
+        if ctx.mesh is None or ctx.mode == "decode":
+            return x
+        return cm.constrain(x, ctx.mesh, config, "batch", "seq", "embed")
+
+    # --- repeated unit, scanned over the layer axis ----------------------
+    def unit_body(carry, layer_in):
+        x, aux_sum = carry
+        layer_params, layer_cache, shared_cache = layer_in
+        caches_out = []
+        for j, btype in enumerate(plan.unit):
+            c_in = layer_cache[j] if use_cache and layer_cache is not None else None
+            x, c_out, aux = BLOCKS[btype][1](layer_params[j], x, ctx, c_in)
+            aux_sum = aux_sum + aux
+            caches_out.append(c_out)
+        shared_out = None
+        if plan.shared is not None:
+            x, shared_out, _ = BLOCKS[plan.shared][1](
+                params["shared"], x, ctx, shared_cache if use_cache else None
+            )
+        x = _anchor(x)
+        if ctx.mode == "train":
+            return (x, aux_sum), None
+        return (x, aux_sum), (caches_out, shared_out)
+
+    if config.remat != "none":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if config.remat == "full"
+            else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+        unit_body = jax.checkpoint(unit_body, policy=policy, prevent_cse=False)
+
+    unit_caches = cache["unit"] if use_cache and cache else [None] * len(plan.unit)
+    shared_caches = cache.get("shared") if use_cache and cache else None
+    xs = (params["unit"], unit_caches if use_cache else None,
+          shared_caches if plan.shared is not None else None)
+    (x, aux_total), ys = jax.lax.scan(unit_body, (x, aux_total), xs,
+                                      length=plan.n_repeat)
+    if use_cache:
+        new_cache["unit"], shared_new = ys
+        if plan.shared is not None:
+            new_cache["shared"] = shared_new
+    x = cm.apply_norm(x, params["final_norm"], config)
+    return x, (new_cache if use_cache else None), aux_total

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (
+    OptConfig,
+    init_opt_state,
+    apply_updates,
+    learning_rate,
+    global_norm,
+)
+
+__all__ = [
+    "OptConfig", "init_opt_state", "apply_updates", "learning_rate",
+    "global_norm",
+]

@@ -1,0 +1,254 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+Empirics (validated in tests): XLA's ``compiled.cost_analysis()`` on an
+SPMD-partitioned module reports **per-device** flops/bytes, so the formulas
+reduce to per-device quantities over per-chip peaks.  ``cost_analysis`` has
+no collective entry at all — collective bytes are parsed from
+``compiled.as_text()`` (the *post*-partitioning optimized HLO, where the
+real collective schedule lives; ``lowered.as_text()`` is pre-SPMD and holds
+none of it).
+
+Per-collective link traffic uses the standard ring-algorithm byte counts
+(per participant, group size n):
+
+    all-reduce       2 x bytes x (n-1)/n
+    all-gather       out_bytes x (n-1)/n
+    reduce-scatter   in_bytes  x (n-1)/n      (= out x (n-1))
+    all-to-all       bytes x (n-1)/n
+    collective-permute  bytes
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(assignment constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+HW_V5E = {
+    "peak_flops": 197e12,    # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,         # bytes/s per chip
+    "link_bw": 50e9,         # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%all-gather.7 = bf16[2,1024]{1,0} all-gather(...)`; tuple-shaped outputs
+# look like `(f32[8]{0}, f32[8]{0}) all-reduce(...)`.
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,\s]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every `dtype[dims]` occurrence in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device collective byte counts parsed from optimized HLO."""
+
+    op_counts: Dict[str, int]
+    out_bytes: Dict[str, int]      # raw output bytes by op kind
+    link_bytes: Dict[str, int]     # ring-model per-device link traffic
+
+    @property
+    def total_link_bytes(self) -> int:
+        return sum(self.link_bytes.values())
+
+    @property
+    def total_out_bytes(self) -> int:
+        return sum(self.out_bytes.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    out_b: Dict[str, int] = {}
+    link_b: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        nbytes = _shape_bytes(shape_txt)
+        n = _group_size(line) or 2
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            traffic = 2 * nbytes * frac
+        elif op == "all-gather":
+            traffic = nbytes * frac              # nbytes is gathered output
+        elif op == "reduce-scatter":
+            traffic = nbytes * (n - 1)           # input = out x n
+        elif op == "all-to-all":
+            traffic = nbytes * frac
+        else:                                    # collective-permute
+            traffic = nbytes
+        counts[op] = counts.get(op, 0) + 1
+        out_b[op] = out_b.get(op, 0) + nbytes
+        link_b[op] = link_b.get(op, 0) + int(traffic)
+    return CollectiveStats(op_counts=counts, out_bytes=out_b, link_bytes=link_b)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str                      # train | prefill | decode | contour
+    n_devices: int
+    # per-device quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_link_bytes: float
+    peak_hbm_bytes: float          # temp+argument+output per device
+    # three terms, seconds
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    # usefulness
+    model_flops_global: float = 0.0
+    flops_ratio: float = 0.0       # model_flops / (hlo_flops x devices)
+    collective_detail: Optional[Dict[str, Any]] = None
+    note: str = ""
+
+    def finalize(self, hw=HW_V5E) -> "RooflineReport":
+        self.t_compute = self.hlo_flops / hw["peak_flops"]
+        self.t_memory = self.hlo_bytes / hw["hbm_bw"]
+        self.t_collective = self.collective_link_bytes / hw["link_bw"]
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        total_hlo = self.hlo_flops * self.n_devices
+        self.flops_ratio = (self.model_flops_global / total_hlo
+                            if total_hlo else 0.0)
+        return self
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     kind: str, n_devices: int,
+                     model_flops_global: float = 0.0,
+                     note: str = "") -> RooflineReport:
+    from repro.roofline.hlo_cost import analyze_text
+
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    # Trip-count-aware HLO cost: XLA's own cost_analysis counts while-loop
+    # bodies once (the layer scan would be 1/n_layers undercounted) — see
+    # repro.roofline.hlo_cost.  The raw XLA numbers ride along as
+    # `xla_*_loop_once` reference fields.
+    cost = analyze_text(compiled.as_text())
+    peak = (ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, kind=kind,
+        n_devices=n_devices,
+        hlo_flops=float(cost.flops),
+        hlo_bytes=float(cost.bytes),
+        collective_link_bytes=float(cost.total_coll_link_bytes),
+        peak_hbm_bytes=float(peak),
+        model_flops_global=model_flops_global,
+        collective_detail={
+            "counts": cost.coll_counts,
+            "link_bytes": cost.coll_link_bytes,
+            "xla_flops_loop_once": float(ca.get("flops", 0.0)),
+            "xla_bytes_loop_once": float(ca.get("bytes accessed", 0.0)),
+        },
+        note=note,
+    )
+    return rep.finalize()
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6·N·D (train) / 2·N·D (forward), N_active for MoE
+# ---------------------------------------------------------------------------
+
+def count_params(model, active_only: bool = False) -> float:
+    """Non-embedding parameter count from the model's ParamSpec tree.
+
+    ``active_only`` scales expert tensors by top_k/n_experts (MoE active
+    parameters — the N in the assignment's 6·N_active·D).
+    """
+    import numpy as np
+    from repro.models.common import ParamSpec
+
+    cfg = model.config
+    specs = model.param_specs()
+    total = 0.0
+
+    def visit(tree, path):
+        nonlocal total
+        if isinstance(tree, ParamSpec):
+            name = path[-1] if path else ""
+            if name in ("tok_embed", "lm_head"):
+                return
+            n = float(np.prod(tree.shape))
+            if active_only and name.endswith("_e"):  # stacked expert tensors
+                n *= cfg.top_k / max(cfg.n_experts, 1)
+            total += n
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                visit(v, path + [k])
+        elif isinstance(tree, (list, tuple)):
+            for i, v in enumerate(tree):
+                visit(v, path + [str(i)])
+
+    visit(specs, [])
+    return total
+
+
+def model_flops(model, kind: str, seq_len: int, global_batch: int) -> float:
+    """Assignment MODEL_FLOPS for one step of a grid cell."""
+    n_active = count_params(model, active_only=True)
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch

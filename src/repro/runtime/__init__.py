@@ -1,0 +1,8 @@
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import derive_mesh_shape, elastic_mesh
+from repro.runtime.recovery import run_with_recovery, FaultInjector
+
+__all__ = [
+    "StragglerMonitor", "derive_mesh_shape", "elastic_mesh",
+    "run_with_recovery", "FaultInjector",
+]

@@ -1,0 +1,49 @@
+"""Elastic scaling: re-derive a mesh from whatever devices survive.
+
+Policy: preserve the model (TP/EP) axis if possible — model-parallel state
+is the expensive thing to reshard — and absorb device loss on the
+data-parallel axes.  Combined with global-array checkpoints
+(``repro.checkpoint``) and a seekable data pipeline, a job can restart on
+any device count that still fits the model axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def derive_mesh_shape(
+    n_devices: int, model_parallel: int, prefer_pods: int = 1
+) -> Tuple[int, ...]:
+    """Largest (pod, data, model) grid using <= n_devices devices.
+
+    ``model_parallel`` is fixed (weights are sharded that way); data/pod
+    axes shrink to fit.  Raises if even one model replica doesn't fit.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot hold model_parallel={model_parallel}"
+        )
+    replicas = n_devices // model_parallel
+    pods = prefer_pods
+    while pods > 1 and replicas % pods:
+        pods -= 1
+    data = replicas // pods
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def elastic_mesh(
+    model_parallel: int,
+    devices: Optional[Sequence] = None,
+    prefer_pods: int = 1,
+) -> jax.sharding.Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape = derive_mesh_shape(len(devices), model_parallel, prefer_pods)
+    n_used = int(np.prod(shape))
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    dev_array = np.asarray(devices[:n_used]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, names)

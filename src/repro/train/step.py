@@ -1,0 +1,75 @@
+"""Training step builder: grad, clip, AdamW, optional microbatch accumulation.
+
+``make_train_step(model, opt_config, grad_accum)`` returns a pure
+``step(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+explicit in/out shardings (see ``repro.launch.dryrun``).  Gradient
+accumulation splits the global batch into ``grad_accum`` microbatches and
+folds them with a ``lax.scan`` — the standard memory/throughput knob.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+
+
+def init_train_state(model, rng, opt_config: OptConfig) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=init_opt_state(params, opt_config))
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model, opt_config: OptConfig, grad_accum: int = 1):
+    loss_fn = lambda p, b: model.loss(p, b)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, Dict[str, jax.Array]]:
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            micro = _split_microbatches(batch, grad_accum)
+
+            def accum(carry, mb):
+                g_sum, l_sum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                g_sum = jax.tree_util.tree_map(jnp.add, g_sum, g)
+                return (g_sum, l_sum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(accum, (g0, jnp.float32(0)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            state.params, grads, state.opt, opt_config)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return step
+
+
+def make_eval_step(model):
+    def step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+    return step

@@ -1,0 +1,93 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import contour, fastsv
+from repro.core.contour import contour_labels
+from repro.graphs.oracle import connected_components_oracle, labels_equivalent
+from repro.graphs.stats import approx_max_diameter
+from repro.graphs.structs import Graph, canonicalize_edges
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(2, 120))
+    m = draw(st.integers(0, 4 * n))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    s, d = canonicalize_edges(np.array(src + [0]), np.array(dst + [0]), n)
+    if s.shape[0] == 0:
+        s, d = np.array([0]), np.array([0])
+    return Graph.from_numpy(s, d, n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_graphs(), st.sampled_from(["C-1", "C-2", "C-m", "C-Syn"]))
+def test_partition_matches_oracle(g, variant):
+    oracle = connected_components_oracle(*g.to_numpy())
+    labels, _ = contour(g, variant=variant)
+    assert (np.asarray(labels) == oracle).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graphs())
+def test_labels_are_component_minima(g):
+    labels = np.asarray(contour(g, variant="C-2")[0])
+    # every label is a vertex id that maps to itself (star roots)
+    assert (labels[labels] == labels).all()
+    # label <= vertex id (minimum-mapping is monotone decreasing)
+    assert (labels <= np.arange(g.n_vertices)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_graphs())
+def test_idempotence_after_convergence(g):
+    """Feeding converged labels through one more MM sweep changes nothing."""
+    from repro.core import labels as lab
+
+    L = contour(g, variant="C-2")[0]
+    L2 = lab.mm_relax(L, g.src, g.dst, order=2)
+    assert (np.asarray(L2) == np.asarray(L)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_graphs())
+def test_fastsv_agrees_with_contour(g):
+    Lc = np.asarray(contour(g, variant="C-2")[0])
+    Lf = np.asarray(fastsv(g)[0])
+    assert labels_equivalent(Lc, Lf)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_theorem1_bound_holds(g):
+    d = max(approx_max_diameter(*g.to_numpy()), 2)
+    bound = math.ceil(math.log(d, 1.5)) + 2   # +1 convergence observation
+    _, iters = contour(g, variant="C-2")
+    assert int(iters) <= bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_graphs(), st.integers(0, 3))
+def test_edge_order_invariance(g, seed):
+    """The fixed point is independent of edge permutation (determinism of
+    the scatter-min combiner; the paper's async races can't affect it)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(g.n_edges)
+    g2 = Graph.from_numpy(np.asarray(g.src)[perm], np.asarray(g.dst)[perm],
+                          g.n_vertices)
+    L1 = np.asarray(contour(g, variant="C-2")[0])
+    L2 = np.asarray(contour(g2, variant="C-2")[0])
+    assert (L1 == L2).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_graphs())
+def test_direction_invariance(g):
+    """Undirected semantics: swapping src/dst leaves the labelling fixed."""
+    g2 = Graph(src=g.dst, dst=g.src, n_vertices=g.n_vertices)
+    L1 = np.asarray(contour(g, variant="C-2")[0])
+    L2 = np.asarray(contour(g2, variant="C-2")[0])
+    assert (L1 == L2).all()

@@ -1,0 +1,167 @@
+"""Model-zoo behaviour: forward/backward, prefill/decode consistency, MoE."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.common import ModelConfig
+from repro.models.model import build_model
+
+TINY = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=256, vocab_pad_multiple=32, remat="none")
+
+
+def _batch(b=2, t=16, vocab=256, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "tokens": jax.random.randint(k1, (b, t), 0, vocab),
+        "labels": jax.random.randint(k2, (b, t), 0, vocab),
+    }
+
+
+CONFIGS = {
+    "dense": ModelConfig(name="d", family="dense", **TINY),
+    "moe": ModelConfig(name="m", family="moe", **TINY, moe_style="deepseek",
+                       n_experts=4, top_k=2, n_shared_experts=1, d_expert=32,
+                       first_k_dense=1, dense_d_ff=128, moe_groups=2),
+    "ssm": ModelConfig(name="x", family="ssm",
+                       **{**TINY, "n_layers": 4, "d_ff": 0,
+                          "n_kv_heads": 4}, slstm_every=4),
+    "hybrid": ModelConfig(name="z", family="hybrid",
+                          **{**TINY, "n_layers": 4, "n_kv_heads": 4},
+                          ssm_state=16, attn_every=2),
+    "audio": ModelConfig(name="a", family="audio",
+                         **{**TINY, "n_kv_heads": 4},
+                         n_enc_layers=2, n_dec_layers=2,
+                         frontend="audio_stub"),
+    "vlm": ModelConfig(name="v", family="vlm", **TINY,
+                       frontend="patch_stub", n_frontend_tokens=4),
+}
+
+
+def _full_batch(config, b=2, t=16, seed=0):
+    batch = _batch(b, t, config.vocab_size, seed)
+    if config.frontend == "patch_stub":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(7), (b, config.n_frontend_tokens,
+                                    config.d_model), jnp.float32)
+    if config.frontend == "audio_stub":
+        batch["frame_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(8), (b, t // 2, config.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("family", sorted(CONFIGS))
+def test_loss_and_grads_finite(family):
+    config = CONFIGS[family]
+    model = build_model(config)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _full_batch(config)
+    (loss, metrics), grads = jax.value_and_grad(
+        model.loss, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    assert any(float(jnp.abs(g).sum()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("family", sorted(CONFIGS))
+def test_prefill_decode_consistency(family):
+    """Greedy decode path == teacher-forced forward at the same positions.
+
+    Prefill tokens[:, :t0], then decode tokens[t0], ... — the logits must
+    match the full-sequence forward's logits at those positions."""
+    config = CONFIGS[family]
+    if family == "moe":
+        # capacity drops are sequence-length dependent (8-token prefill
+        # routes differently from 12-token forward); consistency is only
+        # defined in the drop-free regime
+        config = config.replace(capacity_factor=8.0)
+    model = build_model(config)
+    params = model.init(jax.random.PRNGKey(1))
+    b, t, t0 = 2, 12, 8
+    batch = _full_batch(config, b, t, seed=3)
+
+    # full forward logits via loss-path internals: use prefill on the full
+    # sequence (causal => its last-position logits equal forward's)
+    full_logits, _ = model.prefill(params, batch)
+
+    pre = {k: (v[:, :t0] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    logits, cache = model.prefill(params, pre, max_len=t)
+    outs = [logits[:, -1]]
+    for i in range(t0, t):
+        logits, cache = model.decode_step(
+            params, batch["tokens"][:, i:i + 1], cache)
+        outs.append(logits[:, -1])
+
+    # decode at position t-1 consumed token t-1 => its logits must equal
+    # the full prefill's last-position logits
+    np.testing.assert_allclose(
+        np.asarray(outs[-1], np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        atol=2e-2, rtol=2e-2)
+
+
+def test_moe_capacity_drops_and_aux():
+    config = CONFIGS["moe"].replace(capacity_factor=0.5)  # force drops
+    model = build_model(config)
+    params = model.init(jax.random.PRNGKey(2))
+    loss, metrics = model.loss(params, _full_batch(config))
+    assert np.isfinite(float(loss))
+    assert float(metrics["aux"]) >= 1.0 - 1e-3   # Switch aux >= 1 at balance
+
+
+def test_moe_groups_equivalence():
+    """Grouped dispatch is a pure repartition: G=1 vs G=2 agree when no
+    tokens are dropped (generous capacity)."""
+    base = CONFIGS["moe"].replace(capacity_factor=8.0)
+    m1 = build_model(base.replace(moe_groups=1))
+    m2 = build_model(base.replace(moe_groups=2))
+    params = m1.init(jax.random.PRNGKey(3))
+    batch = _full_batch(base)
+    l1, _ = m1.loss(params, batch)
+    l2, _ = m2.loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-5)
+
+
+def test_rope_partial_and_biases():
+    config = CONFIGS["dense"].replace(rotary_pct=0.25, use_qkv_bias=True,
+                                      norm_type="layernorm")
+    model = build_model(config)
+    params = model.init(jax.random.PRNGKey(4))
+    loss, _ = model.loss(params, _full_batch(config))
+    assert np.isfinite(float(loss))
+
+
+def test_nonparametric_norm_has_no_scale_params():
+    config = CONFIGS["dense"].replace(norm_type="nonparametric")
+    model = build_model(config)
+    leaves = jax.tree_util.tree_leaves_with_path(model.param_specs())
+    names = ["/".join(str(p) for p in path) for path, _ in leaves]
+    assert not any("ln_attn" in n and "scale" in n for n in names)
+
+
+def test_tied_embeddings_shape():
+    config = CONFIGS["dense"].replace(tie_embeddings=True)
+    model = build_model(config)
+    params = model.init(jax.random.PRNGKey(5))
+    assert "lm_head" not in params["embed"]
+    loss, _ = model.loss(params, _full_batch(config))
+    assert np.isfinite(float(loss))
+
+
+def test_long_context_decode_state_is_o1():
+    """ssm/hybrid decode state must not grow with cache length."""
+    config = CONFIGS["ssm"]
+    model = build_model(config)
+    c_small = jax.eval_shape(lambda: model.init_cache(1, 128))
+    c_large = jax.eval_shape(lambda: model.init_cache(1, 1 << 19))
+    sz = lambda c: sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(c))
+    assert sz(c_small) == sz(c_large)
+
+    config = CONFIGS["hybrid"]   # shared attn block DOES grow (KV), mamba not
+    model = build_model(config)
+    c_small = jax.eval_shape(lambda: model.init_cache(1, 128))
+    leaves = jax.tree_util.tree_leaves(c_small)
+    assert len(leaves) > 0

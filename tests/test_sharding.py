@@ -1,0 +1,138 @@
+"""Sharding rules: divisibility-aware resolution, profiles, cache axes.
+
+Uses AbstractMesh (no devices needed) so the production 16x16 / 2x16x16
+topologies are testable on a 1-CPU host.
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, PROFILES
+
+
+def mesh_single():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def mesh_multi():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=2048,
+                n_heads=32, n_kv_heads=8, d_ff=5632, vocab_size=100352)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_resolve_divisible_axis():
+    cfg = _cfg(sharding_profile="tp")
+    rules = cm.make_rules(cfg, mesh_single())
+    spec = cm.resolve_spec((2048, 5632), (None, "ffn"), mesh_single(), rules)
+    assert spec == P(None, "model")
+
+
+def test_resolve_indivisible_falls_back_to_replication():
+    cfg = _cfg(sharding_profile="tp")
+    rules = cm.make_rules(cfg, mesh_single())
+    # 8 kv heads don't divide the 16-way model axis -> replicated
+    spec = cm.resolve_spec((2048, 8, 128), (None, "kv_heads", None),
+                           mesh_single(), rules)
+    assert spec == P()
+
+
+def test_batch_flat_profile_uses_all_axes():
+    cfg = _cfg(sharding_profile="fsdp")
+    rules = cm.make_rules(cfg, mesh_multi())
+    spec = cm.resolve_spec((512, 4096), ("batch", None), mesh_multi(), rules)
+    assert spec == P(("pod", "data", "model"))
+    # batch that only fits (pod, data): graceful prefix assignment
+    spec = cm.resolve_spec((64, 4096), ("batch", None), mesh_multi(), rules)
+    assert spec == P(("pod", "data"))
+
+
+def test_used_axis_exclusivity_kv_cache():
+    """kv_seq and kv_heads can never both claim the model axis."""
+    cfg = _cfg(shard_cache_seq=True)
+    rules = cm.make_rules(cfg, mesh_single())
+    spec = cm.resolve_spec((128, 32768, 8, 128),
+                           ("batch", "kv_seq", "kv_heads", None),
+                           mesh_single(), rules)
+    assert spec == P("data", "model")    # seq took model; heads replicated
+
+    cfg2 = _cfg(shard_cache_seq=False, n_kv_heads=32)
+    rules2 = cm.make_rules(cfg2, mesh_single())
+    spec2 = cm.resolve_spec((128, 32768, 32, 128),
+                            ("batch", "kv_seq", "kv_heads", None),
+                            mesh_single(), rules2)
+    assert spec2 == P("data", None, "model")
+
+
+def test_seq_parallel_profile():
+    cfg = _cfg(sharding_profile="tp_sp")
+    assert cfg.seq_parallel
+    rules = cm.make_rules(cfg, mesh_single())
+    spec = cm.resolve_spec((256, 4096, 2048), ("batch", "seq", "embed"),
+                           mesh_single(), rules)
+    assert spec == P("data", "model")
+
+
+def test_every_profile_has_all_logical_axes():
+    names = set(PROFILES["tp"])
+    for pname, rules in PROFILES.items():
+        assert set(rules) == names, pname
+
+
+def test_param_shardings_cover_whole_tree():
+    from repro.models.model import build_model
+    mesh = mesh_single()
+    for arch_name in ("yi-6b", "deepseek-moe-16b", "zamba2-2.7b"):
+        cfg = get_arch(arch_name).config
+        model = build_model(cfg)
+        shardings = cm.shardings_for(model.param_specs(), cfg, mesh)
+        specs = model.param_specs()
+        n1 = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, cm.ParamSpec)))
+        n2 = len(jax.tree_util.tree_leaves(shardings))
+        assert n1 == n2 > 10
+
+
+def test_expert_weights_sharded_on_model():
+    cfg = get_arch("deepseek-moe-16b").config
+    mesh = mesh_single()
+    rules = cm.make_rules(cfg, mesh)
+    spec = cm.resolve_spec((64, 2048, 1408),
+                           ("experts", None, "expert_inner"), mesh, rules)
+    assert spec == P("model")      # stationary experts: EP without FSDP-AG
+
+    cfg2 = get_arch("arctic-480b").config
+    rules2 = cm.make_rules(cfg2, mesh)
+    spec2 = cm.resolve_spec((128, 7168, 4864),
+                            ("experts", None, "expert_inner"), mesh, rules2)
+    assert spec2 == P("model", None, "data")   # + storage shard (480B)
+
+
+def test_cache_axes_structure_matches_cache():
+    cfg = get_arch("zamba2-2.7b").smoke_config()
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init_cache(2, 64))
+    resolvers = tfm.cache_shardings(cfg, mesh_single(), model.plan)
+    out = tfm.resolve_cache_shardings(resolvers, shapes)
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(shapes))
+
+
+def test_abstract_and_concrete_params_agree():
+    """eval_shape of init == abstract_tree (same constructor code path)."""
+    cfg = get_arch("stablelm-1.6b").smoke_config()
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    abstract = cm.abstract_tree(model.param_specs(), cfg.param_dtype)
+    concrete = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    a = jax.tree_util.tree_map(lambda x: (x.shape, str(x.dtype)), abstract)
+    c = jax.tree_util.tree_map(lambda x: (x.shape, str(x.dtype)), concrete)
+    assert a == c
