@@ -25,8 +25,8 @@ BODY = textwrap.dedent("""
     from repro.graphs import generators as gen
     from repro.graphs.oracle import connected_components_oracle
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import jax_compat
+    mesh = jax_compat.make_mesh((8,), ("data",))
     graphs = {
         "path_32k": gen.path(32768, seed=1),
         "grid_128": gen.grid2d(128, 128),

@@ -11,14 +11,21 @@ roofline reports:
   dist  distributed shard_map contour      (paper §IV-G analogue)
   dedup MinHash+Contour dedup integration
   roof  dry-run roofline tables            (EXPERIMENTS.md §Roofline)
+
+After the sections run, the connectivity suite records (per-method wall
+time + iteration counts, including the ``C-2-blk`` kernel path) are
+written to ``BENCH_connectivity.json`` so the perf trajectory stays
+machine-readable across PRs; disable with ``--json ''``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
 from benchmarks import (
+    connectivity,
     dedup_bench,
     distributed_scaling,
     fig1_iterations,
@@ -46,6 +53,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="subsampled suite for quick runs")
     ap.add_argument("--only", help="comma-separated section prefixes")
+    ap.add_argument("--json", default="BENCH_connectivity.json",
+                    help="connectivity artifact path ('' disables)")
     args = ap.parse_args()
 
     failures = []
@@ -60,6 +69,24 @@ def main() -> None:
             print(f"[{name}] done in {time.time() - t0:.1f}s")
         except Exception:  # noqa: BLE001 — report all sections
             failures.append(name)
+            traceback.print_exc()
+    # Emit the artifact when the connectivity suite is in play (no --only,
+    # or a fig section selected — then run_suite() is already cached);
+    # `--only roof --json x` should not trigger a full suite run.
+    want_json = args.json and (
+        not args.only
+        or any(p.startswith("fig") for p in args.only.split(",")))
+    if want_json:
+        try:
+            records = connectivity.run_suite(fast=args.fast)
+            gate = connectivity.blocked_vs_xla_gate(fast=args.fast)
+            payload = connectivity.records_to_json(records, fast=args.fast,
+                                                   gate=gate)
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"\nwrote {args.json}: {payload['summary']}")
+        except Exception:  # noqa: BLE001 — keep the failure report intact
+            failures.append("bench_json")
             traceback.print_exc()
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")

@@ -15,6 +15,12 @@ Variants (paper §III-B4):
 
 Every variant is a pure function of the edge list, runs under ``jax.jit``
 with a ``lax.while_loop``, and returns ``(labels, n_iterations)``.
+
+The MM sweep itself is routed through the ``kernels.contour_mm`` dispatch
+layer: ``backend="xla"`` (default) is the scatter-min realisation,
+``backend="pallas_blocked"`` the label-blocked vectorized TPU kernel and
+``backend="auto"`` picks per platform/graph size
+(`ops.plan_contour_kernel`) — so every variant can run on every backend.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import labels as lab
 from repro.graphs.structs import Graph
+from repro.kernels.contour_mm import ops as mm_ops
 
 VARIANTS = ("C-Syn", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m")
 
@@ -40,55 +47,61 @@ class ContourState(NamedTuple):
     done: jax.Array        # bool
 
 
-def _sweep_sync(L, src, dst, order):
+def _sweep_sync(L, src, dst, order, backend):
     """Alg. 1 body: one synchronous MM^order sweep."""
-    return lab.mm_relax(L, src, dst, order)
+    return mm_ops.mm_relax_backend(L, src, dst, order=order, backend=backend)
 
 
-def _sweep_async(L, src, dst, order, jump_rounds, compress):
+def _sweep_async(L, src, dst, order, jump_rounds, compress, backend):
     """Optimised sweep: MM^order + pointer-jump recompaction.
 
     ``jump_rounds`` realises high-order variants; ``compress`` is the
     async-update adaptation (spreads freshly lowered labels inside the
     same iteration, mirroring the paper's in-place updates).
     """
-    L = lab.mm_relax(L, src, dst, order)
+    L = mm_ops.mm_relax_backend(L, src, dst, order=order, backend=backend)
     L = lab.pointer_jump(L, rounds=jump_rounds + compress)
     return L
 
 
-def _make_step(variant: str, warmup: int, async_compress: int):
+def _make_step(variant: str, warmup: int, async_compress: int,
+               backend: str = "xla"):
     """Return step(L, it, src, dst) -> L_new for the chosen variant."""
     if variant == "C-Syn":
         def step(L, it, src, dst):
             del it
-            return _sweep_sync(L, src, dst, order=2)
+            return _sweep_sync(L, src, dst, 2, backend)
     elif variant == "C-1":
         def step(L, it, src, dst):
             del it
-            return _sweep_async(L, src, dst, 1, 0, async_compress)
+            return _sweep_async(L, src, dst, 1, 0, async_compress, backend)
     elif variant == "C-2":
         def step(L, it, src, dst):
             del it
-            return _sweep_async(L, src, dst, 2, 0, async_compress)
+            return _sweep_async(L, src, dst, 2, 0, async_compress, backend)
     elif variant == "C-m":
         def step(L, it, src, dst):
             del it
-            return _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, async_compress)
+            return _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
+                                async_compress, backend)
     elif variant == "C-11mm":
         def step(L, it, src, dst):
             return jax.lax.cond(
                 it < warmup,
-                lambda L: _sweep_async(L, src, dst, 1, 0, async_compress),
-                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, async_compress),
+                lambda L: _sweep_async(L, src, dst, 1, 0,
+                                       async_compress, backend),
+                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
+                                       async_compress, backend),
                 L,
             )
     elif variant == "C-1m1m":
         def step(L, it, src, dst):
             return jax.lax.cond(
                 it % 2 == 0,
-                lambda L: _sweep_async(L, src, dst, 1, 0, async_compress),
-                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, async_compress),
+                lambda L: _sweep_async(L, src, dst, 1, 0,
+                                       async_compress, backend),
+                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
+                                       async_compress, backend),
                 L,
             )
     elif variant.startswith("C-") and variant[2:].isdigit():
@@ -101,7 +114,8 @@ def _make_step(variant: str, warmup: int, async_compress: int):
 
         def step(L, it, src, dst):
             del it
-            return _sweep_async(L, src, dst, order, 0, async_compress)
+            return _sweep_async(L, src, dst, order, 0, async_compress,
+                                backend)
     else:
         raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS} "
                          "or literal 'C-<h>'")
@@ -110,7 +124,8 @@ def _make_step(variant: str, warmup: int, async_compress: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_vertices", "variant", "max_iters", "warmup", "async_compress"),
+    static_argnames=("n_vertices", "variant", "max_iters", "warmup",
+                     "async_compress", "backend"),
 )
 def contour_labels(
     src: jax.Array,
@@ -121,12 +136,13 @@ def contour_labels(
     max_iters: int = 100_000,
     warmup: int = 2,
     async_compress: int = 1,
+    backend: str = "xla",
 ):
     """Run the Contour algorithm; returns (labels[n], n_iterations).
 
     Labels converge to the minimum vertex id of each component.
     """
-    step = _make_step(variant, warmup, async_compress)
+    step = _make_step(variant, warmup, async_compress, backend)
     sync = variant == "C-Syn"
     L0 = jnp.arange(n_vertices, dtype=src.dtype)
 

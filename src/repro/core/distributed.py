@@ -9,9 +9,11 @@ Mapping of the paper's Arkouda/Chapel distribution onto a TPU mesh
 * the label array ``L`` is replicated per device (n × 4 B — even a
   2³⁰-vertex graph is a 4 GB replica, fine for 16 GB HBM chips; an
   all-to-all label-sharded variant is the documented scale-out path);
-* each global round: every device relaxes its local edge shard
-  (scatter-min) and compresses, then one ``lax.pmin`` all-reduce merges
-  label arrays — the collective is the *only* cross-device traffic;
+* each global round: every device relaxes its local edge shard (through
+  the ``kernels.contour_mm`` backend dispatch — XLA scatter-min on CPU
+  hosts, the label-blocked Pallas kernel on TPU) and compresses, then one
+  ``lax.pmin`` all-reduce merges label arrays — the collective is the
+  *only* cross-device traffic;
 * convergence: the paper's early-convergence predicate evaluated on local
   edges, AND-reduced across devices.
 
@@ -30,8 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import jax_compat
 from repro.core import labels as lab
 from repro.graphs.structs import Graph
+from repro.kernels.contour_mm import ops as mm_ops
 
 
 class _State(NamedTuple):
@@ -52,13 +56,16 @@ def distributed_contour(
     local_rounds: int = 1,
     max_iters: int = 10_000,
     async_compress: int = 1,
+    backend: str = "xla",
 ):
     """Run Contour C-2 with edges sharded over ``edge_axes`` of ``mesh``.
 
     Returns ``(labels, n_global_rounds)``.  Works on any mesh whose
     ``edge_axes`` product divides the (padded) edge count — the production
     meshes in ``repro.launch.mesh`` and the multi-device CPU test mesh
-    alike.
+    alike.  ``backend`` selects the per-shard sweep realisation through
+    the shared ``kernels.contour_mm`` dispatch layer ("xla" scatter-min by
+    default; "pallas_blocked"/"auto" for the label-blocked TPU kernel).
     """
     n_shards = 1
     for a in edge_axes:
@@ -79,7 +86,8 @@ def distributed_contour(
         def step(s: _State):
             L = s.L
             for _ in range(local_rounds):
-                L = lab.mm_relax(L, src_loc, dst_loc, order=2)
+                L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
+                                            backend=backend)
                 L = lab.pointer_jump(L, rounds=async_compress)
             # the one collective of the round: elementwise min across shards
             L = jax.lax.pmin(L, axis)
@@ -92,7 +100,7 @@ def distributed_contour(
         )
         return out.L, out.it
 
-    mapped = jax.shard_map(
+    mapped = jax_compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(edge_spec, edge_spec),
@@ -108,7 +116,7 @@ def distributed_contour(
 @functools.partial(
     jax.jit,
     static_argnames=("n_vertices", "mesh", "edge_axes", "local_rounds",
-                     "max_iters", "check_every"),
+                     "max_iters", "check_every", "backend"),
 )
 def distributed_contour_step_fn(
     src,
@@ -119,6 +127,7 @@ def distributed_contour_step_fn(
     local_rounds: int = 1,
     max_iters: int = 10_000,
     check_every: int = 1,
+    backend: str = "xla",
 ):
     """jit-compilable entry used by the dry-run/roofline harness.
 
@@ -144,7 +153,8 @@ def distributed_contour_step_fn(
         def step(s: _State):
             L = s.L
             for _ in range(local_rounds):
-                L = lab.mm_relax(L, src_loc, dst_loc, order=2)
+                L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
+                                            backend=backend)
                 L = lab.pointer_jump(L, rounds=1)
             L = jax.lax.pmin(L, axis)
             if check_every <= 1:
@@ -165,6 +175,6 @@ def distributed_contour_step_fn(
         )
         return out.L, out.it
 
-    return jax.shard_map(
+    return jax_compat.shard_map(
         body, mesh=mesh, in_specs=(edge_spec, edge_spec), out_specs=(P(), P())
     )(src, dst)

@@ -31,6 +31,32 @@ def gather_chain(L: jax.Array, idx: jax.Array, order: int) -> Tuple[jax.Array, .
     return tuple(out)
 
 
+def mm_update_stream(
+    L: jax.Array, src: jax.Array, dst: jax.Array, order: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Gather phase of ``MM^order``: the ``(targets, values)`` update stream.
+
+    ``values`` is ``z = min(L^order[src], L^order[dst])`` per edge;
+    ``targets`` are the conditional-assignment positions — the endpoints
+    plus their 1..order-1 mapped vertices (Definition 3).  This is the
+    single source of truth for the sweep's math: :func:`mm_relax` scatters
+    the stream with XLA, the label-blocked Pallas kernel
+    (`kernels.contour_mm.blocked`) scatters the identical stream through
+    binned per-tile segment mins — which is what makes the two backends
+    bit-exact per sweep.
+    """
+    if order < 1:
+        raise ValueError(f"order must be >= 1, got {order}")
+    chain_s = gather_chain(L, src, order)  # L[src], L^2[src], ...
+    chain_d = gather_chain(L, dst, order)
+    z = jnp.minimum(chain_s[-1], chain_d[-1])
+    targets = [src, dst]
+    for k in range(order - 1):
+        targets.append(chain_s[k])
+        targets.append(chain_d[k])
+    return jnp.concatenate(targets), jnp.tile(z, len(targets))
+
+
 def mm_relax(L: jax.Array, src: jax.Array, dst: jax.Array, order: int) -> jax.Array:
     """One parallel sweep of ``MM^order`` over every edge; returns new labels.
 
@@ -38,20 +64,7 @@ def mm_relax(L: jax.Array, src: jax.Array, dst: jax.Array, order: int) -> jax.Ar
     all conditional assignments combine by minimum, exactly Alg. 1 lines
     6-9 (``L_u`` initialised to ``L``, then ``L = L_u``).
     """
-    if order < 1:
-        raise ValueError(f"order must be >= 1, got {order}")
-    chain_s = gather_chain(L, src, order)  # L[src], L^2[src], ...
-    chain_d = gather_chain(L, dst, order)
-    z = jnp.minimum(chain_s[-1], chain_d[-1])
-
-    # Update positions: the endpoints themselves plus their 1..order-1
-    # mapped vertices (Definition 3).
-    targets = [src, dst]
-    for k in range(order - 1):
-        targets.append(chain_s[k])
-        targets.append(chain_d[k])
-    idx = jnp.concatenate(targets)
-    vals = jnp.tile(z, len(targets))
+    idx, vals = mm_update_stream(L, src, dst, order)
     return L.at[idx].min(vals)
 
 

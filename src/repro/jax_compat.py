@@ -1,0 +1,71 @@
+"""Version tolerance for the small jax API surface this repo leans on.
+
+The codebase targets the current mesh/shard_map API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``AbstractMesh(sizes, names)``, dict-valued
+``compiled.cost_analysis()``).  The baked accelerator toolchain may ship an
+older jax where those live under experimental names or older signatures
+(e.g. 0.4.x: ``jax.experimental.shard_map``, no ``AxisType``,
+``AbstractMesh(((name, size), ...))``, list-valued ``cost_analysis``).
+Importing the symbols from here keeps every call site version-agnostic —
+and keeps the whole distributed/sharding layer *runnable* instead of
+failing on import-time attribute errors.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.5: experimental home, whose static replication checker
+    # predates a `while` rule — disable it (validation only, not semantics)
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_legacy(f, **kwargs)
+
+
+def mesh_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto, ...)`` where supported; ``{}`` on older jax
+    (whose meshes behave as Auto for shard_map/jit purposes anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return {"axis_types": (axis_type.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh(axis_shapes: Sequence[int],
+              axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with Auto axis types where the kwarg exists."""
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         **mesh_axis_kwargs(len(axis_names)))
+
+
+def device_mesh(devices, axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """`jax.sharding.Mesh` over an explicit device array, Auto-typed."""
+    return jax.sharding.Mesh(devices, tuple(axis_names),
+                             **mesh_axis_kwargs(len(axis_names)))
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """`AbstractMesh` across the signature change.
+
+    Current jax: ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x:
+    ``AbstractMesh(shape_tuple)`` with (name, size) pairs.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def cost_analysis(compiled) -> dict:
+    """Dict-valued ``compiled.cost_analysis()`` on every jax version
+    (0.4.x returned a one-element list of dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

@@ -1,4 +1,24 @@
-from repro.kernels.contour_mm.ops import contour_mm_step, contour_cc_fixpoint
-from repro.kernels.contour_mm.ref import mm_block_ref
+from repro.kernels.contour_mm.blocked import binned_scatter_min_pallas
+from repro.kernels.contour_mm.ops import (
+    BACKENDS,
+    KernelPlan,
+    contour_cc_fixpoint,
+    contour_mm_step,
+    mm_relax_backend,
+    mm_update_stream,
+    plan_contour_kernel,
+)
+from repro.kernels.contour_mm.ref import mm_block_ref, mm_sync_ref
 
-__all__ = ["contour_mm_step", "contour_cc_fixpoint", "mm_block_ref"]
+__all__ = [
+    "BACKENDS",
+    "KernelPlan",
+    "binned_scatter_min_pallas",
+    "contour_cc_fixpoint",
+    "contour_mm_step",
+    "mm_block_ref",
+    "mm_relax_backend",
+    "mm_sync_ref",
+    "mm_update_stream",
+    "plan_contour_kernel",
+]

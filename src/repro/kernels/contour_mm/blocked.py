@@ -1,0 +1,158 @@
+"""Label-blocked, vectorized scatter-min Pallas kernel (DESIGN.md §3.4).
+
+The seed kernel (`kernel.py`) keeps the whole label array ``L`` resident in
+VMEM and relaxes edges one at a time on the scalar unit — a hard ceiling of
+n ≈ 3M vertices and zero VPU utilisation.  This module lifts both limits
+with the two-phase *label-blocked* scheme:
+
+Phase 1 — radix binning (device-side XLA, inside the same jit):
+  The MM^h sweep is first reduced to an *update stream*: ``2h·m`` pairs
+  ``(target, value)`` where ``value = z = min(L^h[w], L^h[v])`` and the
+  targets are the conditional-assignment positions ``{w, v, L[w], …}``
+  (`ops.mm_update_stream`).  The stream is stably sorted by
+  ``target // label_block`` — the radix bin — and each bin's segment is
+  padded up to a multiple of ``chunk_updates`` so that **no chunk straddles
+  a label-block boundary**.  A chunk→block map is derived with a
+  ``searchsorted`` over the padded bin offsets.
+
+Phase 2 — one ``pallas_call`` over update chunks:
+  The grid walks the padded stream chunk by chunk; the chunk→block map is
+  a *scalar-prefetch* operand, so the BlockSpec index map for ``L`` can
+  place exactly the right ``label_block``-sized tile of ``L`` in VMEM for
+  each grid step (``lambda c, m: (m[c],)``).  Chunks of the same bin are
+  contiguous, so each tile is loaded/flushed once per sweep and revisited
+  in place across its chunks (input/output aliasing).  Inside the kernel
+  the scatter-min is *vectorized*: a one-hot ``(chunk, label_block)``
+  compare + ``jnp.min`` reduction replaces the scalar read-min-write chain
+  — pure VPU work, no atomics, no serial dependence.
+
+VMEM budget per grid step is ``4·label_block`` bytes for the tile plus
+``4·chunk_updates·label_block`` for the one-hot combine — independent of
+``n``, so the vertex ceiling is gone.  The per-sweep result is bit-exact
+equal to the synchronous ``lab.mm_relax`` scatter-min (both compute
+``L.at[targets].min(values)``), hence identical fixed point.
+
+Index arithmetic uses int32 positions into the update stream; callers keep
+``2h·m + n_blocks·chunk_updates < 2^31`` (enforced below).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Padding slots carry this value; min() makes them no-ops and the kernel
+# additionally masks them out of the one-hot combine.
+_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _round_up(x, k):
+    return (x + k - 1) // k * k
+
+
+def _scatter_min_kernel(label_block: int, chunk: int):
+    """Build the per-chunk kernel body for the given static tile sizes."""
+
+    def kernel(map_ref, t_ref, v_ref, l_in_ref, l_ref):
+        c = pl.program_id(0)
+        b = map_ref[c]
+        # Output VMEM windows are uninitialized on each tile's first grid
+        # visit — the HBM-level input/output aliasing does not seed them —
+        # so start the accumulator from the fetched input tile.  Chunks of
+        # a bin are contiguous, so "first visit" is a map transition.
+        prev_b = map_ref[jnp.maximum(c - 1, 0)]
+
+        @pl.when((c == 0) | (b != prev_b))
+        def _():
+            l_ref[...] = l_in_ref[...]
+
+        base = b * label_block
+        t_loc = t_ref[...] - base
+        v = v_ref[...]
+        valid = (t_loc >= 0) & (t_loc < label_block) & (v < _SENTINEL)
+        # Vectorized scatter-min: one-hot compare against every tile slot,
+        # then a min-reduce over the chunk axis (VPU; no serial chain).
+        cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, label_block), 1)
+        contrib = jnp.where(valid[:, None] & (cols == t_loc[:, None]),
+                            v[:, None], _SENTINEL)
+        l_ref[...] = jnp.minimum(l_ref[...], jnp.min(contrib, axis=0))
+
+    return kernel
+
+
+def binned_scatter_min_pallas(
+    L: jax.Array,
+    targets: jax.Array,
+    values: jax.Array,
+    *,
+    label_block: int = 2048,
+    chunk_updates: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``L.at[targets].min(values)`` with ``L`` tiled by label block.
+
+    Args:
+      L: int32[n] labels.
+      targets: int32[K] update positions, each in ``[0, n)``.
+      values: int32[K] update values (``< _SENTINEL``).
+      label_block: tile height ``B``; VMEM per step is ``4·B·(chunk+1)`` B.
+      chunk_updates: updates processed per grid step.
+      interpret: run in interpreter mode (CPU validation); False on TPU.
+    """
+    n = L.shape[0]
+    K = targets.shape[0]
+    B = int(label_block)
+    E = int(chunk_updates)
+    n_blocks = (n + B - 1) // B
+    n_pad = n_blocks * B
+    if K + n_blocks * E >= 2**31:
+        raise ValueError(
+            f"update stream of {K} + {n_blocks}*{E} padding overflows int32 "
+            "positions; raise label_block or split the sweep")
+    L_pad = jnp.pad(L, (0, n_pad - n), constant_values=_SENTINEL)
+
+    # -- Phase 1: radix-bin the update stream by target // B ---------------
+    blk = targets // B
+    order = jnp.argsort(blk, stable=True)
+    t_sorted = targets[order]
+    v_sorted = values[order]
+    blk_sorted = blk[order]
+
+    counts = jnp.bincount(blk, length=n_blocks)
+    padded_counts = _round_up(counts, E)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(padded_counts)[:-1]])
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    # position in the boundary-aligned padded layout
+    pos = offsets[blk_sorted] + (jnp.arange(K) - seg_start[blk_sorted])
+
+    T = _round_up(K, E) + n_blocks * E  # static capacity >= sum(padded)
+    t_pad = jnp.zeros((T,), targets.dtype).at[pos].set(t_sorted)
+    v_pad = jnp.full((T,), _SENTINEL, values.dtype).at[pos].set(v_sorted)
+
+    n_chunks = T // E
+    chunk_block = jnp.clip(
+        jnp.searchsorted(offsets, jnp.arange(n_chunks) * E, side="right") - 1,
+        0, n_blocks - 1).astype(jnp.int32)
+
+    # -- Phase 2: one pallas_call over chunks, L tiled by BlockSpec --------
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((E,), lambda c, m: (c,)),
+            pl.BlockSpec((E,), lambda c, m: (c,)),
+            pl.BlockSpec((B,), lambda c, m: (m[c],)),
+        ],
+        out_specs=pl.BlockSpec((B,), lambda c, m: (m[c],)),
+    )
+    out = pl.pallas_call(
+        _scatter_min_kernel(B, E),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad,), L.dtype),
+        input_output_aliases={3: 0},  # L tile accumulates across chunks
+        interpret=interpret,
+    )(chunk_block, t_pad, v_pad, L_pad)
+    return out[:n]

@@ -16,9 +16,10 @@ TPU adaptation notes (DESIGN.md §3):
     the per-core loop is sequential on the scalar unit;
   * VMEM budget: ``L`` occupies ``4·n`` bytes and the edge block ``8·BE``
     bytes.  With 16 MiB VMEM this kernel handles shards up to n ≈ 3M
-    vertices directly; larger graphs use the label-blocked two-phase
-    variant where edges are radix-binned by ``L``-block (documented in
-    ops.py) or the XLA scatter-min path.
+    vertices directly; larger graphs use the label-blocked vectorized
+    kernel in ``blocked.py`` (updates radix-binned by ``L``-block, ``L``
+    tiled via BlockSpec — DESIGN.md §3.4) or the XLA scatter-min path.
+    Backend selection lives in ``ops.plan_contour_kernel``.
 """
 from __future__ import annotations
 

@@ -1,32 +1,110 @@
-"""Jit'd wrappers for the contour_mm kernel with backend selection.
+"""Jit'd wrappers for the contour_mm kernels: backend dispatch + autotune.
 
-``backend="pallas"`` runs the fused in-VMEM asynchronous kernel
-(interpret mode on CPU, compiled on TPU); ``backend="xla"`` runs the
-equivalent synchronous scatter-min (what the production dry-run compiles —
-Pallas TPU kernels cannot compile on the CPU host platform).
+Three device backends realise the same MM^h sweep (DESIGN.md §3):
 
-Scaling note: the Pallas path keeps all of ``L`` VMEM-resident, valid to
-n ≈ 3M vertices.  Beyond that the intended TPU plan is label-blocking:
-radix-bin edges by ``min(L[w], L[v]) // block`` and run one pallas_call per
-label block — same kernel body, BlockSpec over ``L`` tiles.  The XLA
-backend has no such limit and is what `repro.core.distributed` uses.
+* ``"xla"``           — synchronous scatter-min (`lab.mm_relax`); the only
+  backend that *compiles* on a CPU host (Pallas TPU kernels cannot), and
+  what `repro.core.distributed` defaults to.
+* ``"pallas"``        — the seed fused in-VMEM asynchronous kernel
+  (`kernel.mm2_pallas`): whole ``L`` VMEM-resident (ceiling n ≈ 3M),
+  scalar sequential inner loop, 2-order only.  Kept as the
+  deterministic-async reference.
+* ``"pallas_blocked"`` — the label-blocked vectorized kernel
+  (`blocked.binned_scatter_min_pallas`): edges are reduced to an update
+  stream, radix-binned by ``target // label_block`` on device, and one
+  grid step per update chunk runs with ``L`` *tiled* via BlockSpec — no
+  vertex ceiling, VPU-vectorized scatter-min, any order.  Per sweep it is
+  bit-exact equal to ``"xla"``.
+
+``"auto"`` picks per graph size and platform via :func:`plan_contour_kernel`
+— the shared dispatch/autotune layer used by `core.contour`,
+`core.distributed` and `benchmarks.connectivity`.
+
+:func:`contour_cc_fixpoint` iterates any backend to the connectivity fixed
+point inside a single ``lax.while_loop`` — the convergence flag stays on
+device, so there are **zero** per-iteration host syncs (the seed version
+pulled ``bool(converged_early(...))`` across the device boundary every
+iteration).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import labels as lab
 from repro.graphs.structs import Graph
+from repro.kernels.contour_mm.blocked import (_round_up,
+                                              binned_scatter_min_pallas)
 from repro.kernels.contour_mm.kernel import mm2_pallas
+
+BACKENDS = ("auto", "xla", "pallas", "pallas_blocked")
+
+# Above this vertex count a fully VMEM-resident int32 L no longer fits the
+# ~16 MiB VMEM budget alongside edge blocks (kernel.py header) — the scalar
+# "pallas" backend is invalid and blocking is mandatory.
+WHOLE_L_VMEM_CEILING = 3_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Resolved backend + tile sizes for one graph size (hashable/static)."""
+
+    backend: str                # concrete: "xla" | "pallas" | "pallas_blocked"
+    block_edges: int = 512      # edge block of the scalar pallas kernel
+    label_block: int = 2048     # L tile height of the blocked kernel
+    chunk_updates: int = 128    # update-stream chunk of the blocked kernel
+    interpret: bool = False     # Pallas interpreter mode (CPU validation)
+
+
+def plan_contour_kernel(
+    n_vertices: int,
+    n_edges: int,
+    platform: Optional[str] = None,
+) -> KernelPlan:
+    """Autotune heuristics: pick backend + tile sizes for a graph size.
+
+    Off-TPU the only compilable backend is XLA scatter-min.  On TPU the
+    blocked kernel is always eligible (no ceiling); tile sizes balance the
+    one-hot combine work (∝ ``label_block`` per update) against per-bin
+    padding waste (∝ ``n_blocks·chunk_updates``):
+
+    * small graphs waste least with one or two tiles spanning all of L;
+    * large graphs hold ``label_block`` at 2048 (8 KiB tile, 1 MiB one-hot
+      buffer at chunk 128) and scale ``chunk_updates`` with edge density so
+      sparse bins do not drown in padding.
+    """
+    platform = platform or jax.default_backend()
+    if platform != "tpu":
+        # Pallas TPU kernels cannot compile here; if a caller forces a
+        # pallas backend anyway it runs in interpret (validation) mode.
+        return KernelPlan(backend="xla", interpret=True)
+    if n_vertices <= 4096:
+        # single tile: the blocked kernel degenerates to a whole-L
+        # vectorized sweep with zero binning waste
+        label_block = max(256, _round_up(n_vertices, 128))
+        chunk = 128
+    else:
+        label_block = 2048
+        # denser update streams amortise more padding; cap the one-hot
+        # buffer at chunk*label_block = 512Ki elements (2 MiB)
+        chunk = 64 if n_edges < 8 * n_vertices else 256
+    block_edges = 512 if n_edges < 1 << 20 else 2048
+    return KernelPlan(
+        backend="pallas_blocked",
+        block_edges=block_edges,
+        label_block=label_block,
+        chunk_updates=chunk,
+        interpret=False,
+    )
 
 
 def _pad_edges(src, dst, multiple: int):
     m = src.shape[0]
-    target = (m + multiple - 1) // multiple * multiple
+    target = _round_up(m, multiple)
     pad = target - m
     if pad:
         src = jnp.concatenate([src, jnp.zeros((pad,), src.dtype)])
@@ -34,8 +112,71 @@ def _pad_edges(src, dst, multiple: int):
     return src, dst
 
 
+# The sweep's gather phase lives next to mm_relax so the two realisations
+# can never drift apart (bit-exactness is load-bearing — see ref.py).
+mm_update_stream = lab.mm_update_stream
+
+
+def mm_relax_backend(
+    L: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    *,
+    order: int = 2,
+    backend: str = "auto",
+    block_edges: Optional[int] = None,
+    label_block: Optional[int] = None,
+    chunk_updates: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    platform: Optional[str] = None,
+) -> jax.Array:
+    """One MM^order sweep on the chosen backend (trace-level, not jitted).
+
+    ``None`` tile parameters resolve from :func:`plan_contour_kernel`,
+    including ``interpret`` (False on TPU, True elsewhere — validation
+    mode).  ``platform`` overrides the plan's target platform for AOT
+    lowering from a different host (e.g. ``.lower()``-ing a TPU program on
+    a CPU dry-run host).  This is the single entry every layer routes
+    sweeps through.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    n = int(L.shape[0])
+    plan = plan_contour_kernel(n, int(src.shape[0]), platform=platform)
+    if backend == "auto":
+        backend = plan.backend
+    block_edges = plan.block_edges if block_edges is None else block_edges
+    label_block = plan.label_block if label_block is None else label_block
+    chunk_updates = (plan.chunk_updates if chunk_updates is None
+                     else chunk_updates)
+    interpret = plan.interpret if interpret is None else interpret
+
+    if backend == "xla":
+        return lab.mm_relax(L, src, dst, order)
+    if backend == "pallas":
+        if order != 2:
+            raise ValueError(
+                "the scalar 'pallas' kernel is 2-order only; use "
+                "'pallas_blocked' or 'xla' for order != 2")
+        if n > WHOLE_L_VMEM_CEILING:
+            raise ValueError(
+                f"n_vertices={n} exceeds the scalar 'pallas' kernel's "
+                f"whole-L VMEM ceiling ({WHOLE_L_VMEM_CEILING}); use "
+                "'pallas_blocked' (label-tiled, no ceiling) or 'xla'")
+        src_p, dst_p = _pad_edges(src, dst, block_edges)
+        return mm2_pallas(src_p, dst_p, L, block_edges=block_edges,
+                          interpret=interpret)
+    # pallas_blocked
+    t, v = lab.mm_update_stream(L, src, dst, order)
+    return binned_scatter_min_pallas(
+        L, t, v, label_block=label_block, chunk_updates=chunk_updates,
+        interpret=interpret)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("backend", "block_edges", "interpret")
+    jax.jit,
+    static_argnames=("backend", "order", "block_edges", "label_block",
+                     "chunk_updates", "interpret", "platform"),
 )
 def contour_mm_step(
     src: jax.Array,
@@ -43,39 +184,67 @@ def contour_mm_step(
     L: jax.Array,
     *,
     backend: str = "pallas",
+    order: int = 2,
     block_edges: int = 512,
-    interpret: bool = True,
+    label_block: Optional[int] = None,
+    chunk_updates: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    platform: Optional[str] = None,
 ) -> jax.Array:
-    """One MM² sweep over all edges. Returns the updated label array."""
-    if backend == "pallas":
-        src, dst = _pad_edges(src, dst, block_edges)
-        return mm2_pallas(src, dst, L, block_edges=block_edges, interpret=interpret)
-    elif backend == "xla":
-        return lab.mm_relax(L, src, dst, order=2)
-    raise ValueError(f"unknown backend {backend!r}")
+    """One MM sweep over all edges. Returns the updated label array."""
+    return mm_relax_backend(
+        L, src, dst, order=order, backend=backend, block_edges=block_edges,
+        label_block=label_block, chunk_updates=chunk_updates,
+        interpret=interpret, platform=platform)
 
 
+class _FixState(NamedTuple):
+    L: jax.Array
+    it: jax.Array          # int32 iteration counter
+    done: jax.Array        # bool, lives on device across iterations
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "order", "block_edges", "label_block",
+                     "chunk_updates", "interpret", "platform", "max_iters"),
+)
 def contour_cc_fixpoint(
     graph: Graph,
     *,
-    backend: str = "pallas",
+    backend: str = "auto",
+    order: int = 2,
     block_edges: int = 512,
-    interpret: bool = True,
+    label_block: Optional[int] = None,
+    chunk_updates: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    platform: Optional[str] = None,
     max_iters: int = 10_000,
 ):
-    """Iterate the kernel to the connectivity fixed point.
+    """Iterate the kernel to the connectivity fixed point, fully on device.
 
-    Host-side fixpoint loop (the kernel is the inner hot loop; iteration
-    counts are tiny — Theorem 1).  Returns (labels, n_iterations).
+    A single ``lax.while_loop`` carries ``(L, it, done)``; the paper's
+    early-convergence predicate (§III-B2) is evaluated on device and feeds
+    the loop condition directly — no per-iteration device→host readback.
+    (The jit around this function is itself the proof: a host-side
+    ``bool(converged)`` would fail to trace.)  Returns (labels, n_iters).
     """
-    L = jnp.arange(graph.n_vertices, dtype=graph.src.dtype)
-    for it in range(max_iters):
-        L_new = contour_mm_step(
-            graph.src, graph.dst, L,
-            backend=backend, block_edges=block_edges, interpret=interpret,
-        )
-        L_new = lab.pointer_jump(L_new, rounds=1)
-        if bool(lab.converged_early(L_new, graph.src, graph.dst)):
-            return L_new, it + 1
-        L = L_new
-    return L, max_iters
+    def cond(s: _FixState):
+        return (~s.done) & (s.it < max_iters)
+
+    def body(s: _FixState):
+        L = mm_relax_backend(
+            s.L, graph.src, graph.dst, order=order, backend=backend,
+            block_edges=block_edges, label_block=label_block,
+            chunk_updates=chunk_updates, interpret=interpret,
+            platform=platform)
+        L = lab.pointer_jump(L, rounds=1)
+        done = lab.converged_early(L, graph.src, graph.dst)
+        return _FixState(L=L, it=s.it + 1, done=done)
+
+    L0 = jnp.arange(graph.n_vertices, dtype=graph.src.dtype)
+    out = jax.lax.while_loop(
+        cond, body, _FixState(L=L0, it=jnp.int32(0), done=jnp.array(False)))
+    # Interior vertices of padded/isolated chains may be one hop from the
+    # star root (same as core.contour.contour_labels' final compression).
+    return lab.pointer_jump(out.L, rounds=1), out.it

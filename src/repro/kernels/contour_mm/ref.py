@@ -30,7 +30,11 @@ def mm_block_ref(src: jax.Array, dst: jax.Array, L: jax.Array) -> jax.Array:
 
 
 def mm_sync_ref(src: jax.Array, dst: jax.Array, L: jax.Array) -> jax.Array:
-    """Synchronous (Alg. 1) sweep — the XLA scatter-min backend's oracle."""
+    """Synchronous (Alg. 1) sweep — oracle for the XLA scatter-min backend
+    *and* the label-blocked Pallas kernel: the blocked path computes the
+    identical ``L.at[idx].min(z)`` through binned per-tile segment mins, so
+    it must match this bit-for-bit per sweep (not just at the fixed point).
+    """
     lw, lv = L[src], L[dst]
     z = jnp.minimum(L[lw], L[lv])
     idx = jnp.concatenate([src, dst, lw, lv])

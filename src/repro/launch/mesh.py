@@ -18,15 +18,14 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
+from repro import jax_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """The assignment's production mesh: 16x16 single pod / 2x16x16 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1,
@@ -40,7 +39,4 @@ def make_host_mesh(model_parallel: int = 1,
         raise ValueError(f"{n} devices not divisible by tp={model_parallel}")
     shape = (n // model_parallel, model_parallel)
     dev = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(
-        dev, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return jax_compat.device_mesh(dev, ("data", "model"))

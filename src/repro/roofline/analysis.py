@@ -30,6 +30,8 @@ import dataclasses
 import re
 from typing import Any, Dict, Optional
 
+from repro import jax_compat
+
 HW_V5E = {
     "peak_flops": 197e12,    # bf16 FLOP/s per chip
     "hbm_bw": 819e9,         # bytes/s per chip
@@ -174,7 +176,7 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      note: str = "") -> RooflineReport:
     from repro.roofline.hlo_cost import analyze_text
 
-    ca = compiled.cost_analysis()
+    ca = jax_compat.cost_analysis(compiled)
     ma = compiled.memory_analysis()
     # Trip-count-aware HLO cost: XLA's own cost_analysis counts while-loop
     # bodies once (the layer scan would be 1/n_layers undercounted) — see

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # full-arch train/serve steps; excluded from the fast tier
+
 from repro.configs import ARCHS, SHAPES, get_arch, input_specs
 from repro.models.model import build_model
 from repro.optim.adamw import OptConfig

@@ -1,7 +1,15 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests (hypothesis) for the system's invariants.
+
+``hypothesis`` is an optional dependency (pyproject ``[test]`` extra); when
+absent this module must *skip*, not error — a collection error under
+``pytest -x`` would zero out the whole tier-1 suite.
+"""
 import math
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import contour, fastsv

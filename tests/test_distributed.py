@@ -14,6 +14,7 @@ import pytest
 
 import jax
 
+from repro import jax_compat
 from repro.core.distributed import distributed_contour
 from repro.graphs import generators as gen
 from repro.graphs.oracle import connected_components_oracle
@@ -23,9 +24,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 def test_distributed_single_device_mesh():
     """Degenerate 1-device mesh: the shard_map path must still be exact."""
-    mesh = jax.sharding.Mesh(
-        np.array(jax.devices()[:1]), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
     g = gen.components_mix([gen.path(400, seed=1), gen.rmat(9, seed=2)],
                            seed=3)
     oracle = connected_components_oracle(*g.to_numpy())
@@ -39,12 +38,12 @@ _SUBPROCESS_BODY = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax
+    from repro import jax_compat
     from repro.core.distributed import distributed_contour
     from repro.graphs import generators as gen
     from repro.graphs.oracle import connected_components_oracle
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax_compat.make_mesh((8,), ("data",))
     graphs = [
         gen.path(3000, seed=1),
         gen.grid2d(40, 40),
@@ -69,6 +68,7 @@ _SUBPROCESS_BODY = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # spawns a fresh 8-device subprocess (jit recompiles)
 def test_distributed_8way_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

@@ -54,6 +54,138 @@ def test_contour_mm_xla_backend_matches_sync_ref():
 
 
 # ---------------------------------------------------------------------------
+# contour_mm: label-blocked vectorized backend (DESIGN.md §3.4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("label_block,chunk", [
+    (512, 128),    # 8 label blocks at n=4096
+    (1024, 256),   # 4 label blocks
+    (300, 64),     # 14 blocks, tile not a divisor of n -> L padding path
+])
+def test_blocked_sweep_bitexact_vs_mm_relax(label_block, chunk):
+    """Per-sweep the blocked kernel must equal the scatter-min oracle
+    bit-for-bit on graphs whose n spans >= 4 label blocks — including on
+    mid-run (non-trivial) label states."""
+    from repro.core import labels as lab
+    from repro.kernels.contour_mm.ops import contour_mm_step
+
+    g = gen.rmat(12, seed=7)   # n = 4096
+    assert g.n_vertices >= 4 * label_block
+    L = jnp.arange(g.n_vertices, dtype=jnp.int32)
+    for _ in range(3):         # sweep 0 from identity, then mid-run states
+        out = contour_mm_step(g.src, g.dst, L, backend="pallas_blocked",
+                              label_block=label_block, chunk_updates=chunk)
+        ref = lab.mm_relax(L, g.src, g.dst, order=2)
+        assert (np.asarray(out) == np.asarray(ref)).all()
+        L = ref
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_blocked_backend_is_order_generic(order):
+    from repro.core import labels as lab
+    from repro.kernels.contour_mm.ops import contour_mm_step
+
+    g = gen.grid2d(40, 40)
+    L0 = jnp.arange(g.n_vertices, dtype=jnp.int32)
+    out = contour_mm_step(g.src, g.dst, L0, backend="pallas_blocked",
+                          order=order, label_block=256, chunk_updates=64)
+    ref = lab.mm_relax(L0, g.src, g.dst, order=order)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_blocked_fixpoint_matches_oracle_multiblock():
+    """On-device fixpoint on the blocked kernel, n spanning >= 4 blocks."""
+    from repro.kernels.contour_mm.ops import contour_cc_fixpoint
+
+    g = gen.components_mix(
+        [gen.path(900, seed=1), gen.star(700, seed=2), gen.rmat(10, seed=3)],
+        seed=4)
+    assert g.n_vertices >= 4 * 512
+    labels, iters = contour_cc_fixpoint(g, backend="pallas_blocked",
+                                        label_block=512, chunk_updates=128)
+    oracle = connected_components_oracle(*g.to_numpy())
+    assert (np.asarray(labels) == oracle).all()
+    assert 1 <= int(iters) < 30
+
+
+def test_fixpoint_runs_on_device_without_host_sync():
+    """`contour_cc_fixpoint` must be a single on-device `lax.while_loop`:
+    it is jitted end-to-end, so any seed-style per-iteration
+    `bool(converged_early(...))` readback would fail to trace; the lowered
+    HLO must contain the while op carrying the convergence flag."""
+    from repro.kernels.contour_mm.ops import contour_cc_fixpoint
+
+    g = gen.rmat(9, seed=11)
+    txt = contour_cc_fixpoint.lower(g, backend="xla").as_text()
+    assert "while" in txt
+    labels, iters = contour_cc_fixpoint(g, backend="xla")
+    oracle = connected_components_oracle(*g.to_numpy())
+    assert (np.asarray(labels) == oracle).all()
+
+
+def test_fixpoint_backends_agree():
+    """Every backend reaches the identical min-vertex-id fixed point."""
+    from repro.kernels.contour_mm.ops import contour_cc_fixpoint
+
+    g = gen.components_mix([gen.path(300, seed=1), gen.star(200, seed=2)],
+                           seed=3)
+    oracle = connected_components_oracle(*g.to_numpy())
+    for backend in ("xla", "auto", "pallas", "pallas_blocked"):
+        labels, iters = contour_cc_fixpoint(g, backend=backend,
+                                            label_block=256, chunk_updates=64)
+        assert (np.asarray(labels) == oracle).all(), backend
+        assert int(iters) < 30, backend
+
+
+def test_dispatch_plan():
+    """The autotune layer: XLA off-TPU; blocked with sane tiles on TPU."""
+    from repro.kernels.contour_mm.ops import plan_contour_kernel
+
+    cpu = plan_contour_kernel(100_000, 1_000_000, platform="cpu")
+    assert cpu.backend == "xla"
+    assert cpu.interpret            # forced pallas runs in validation mode
+
+    small = plan_contour_kernel(2_000, 20_000, platform="tpu")
+    assert small.backend == "pallas_blocked"
+    assert small.label_block >= 2_000       # single tile, no binning waste
+    assert not small.interpret
+
+    big = plan_contour_kernel(50_000_000, 800_000_000, platform="tpu")
+    assert big.backend == "pallas_blocked"  # no vertex ceiling
+    # one-hot combine buffer stays within a VMEM-friendly budget
+    assert big.label_block * big.chunk_updates * 4 <= 4 * 1024 * 1024
+
+    auto = plan_contour_kernel(10_000, 80_000)   # this host: not a TPU
+    assert auto.backend in ("xla", "pallas_blocked")
+
+
+def test_scalar_pallas_vmem_ceiling_enforced():
+    """Above the whole-L VMEM ceiling the scalar kernel must refuse with a
+    clear error (not an opaque Mosaic allocation failure)."""
+    from repro.kernels.contour_mm.ops import (WHOLE_L_VMEM_CEILING,
+                                              mm_relax_backend)
+
+    n = WHOLE_L_VMEM_CEILING + 1
+    L = jnp.zeros((n,), jnp.int32)
+    src = jnp.zeros((4,), jnp.int32)
+    dst = jnp.ones((4,), jnp.int32)
+    with pytest.raises(ValueError, match="ceiling"):
+        mm_relax_backend(L, src, dst, backend="pallas")
+
+
+def test_auto_backend_step_matches_mm_relax():
+    from repro.core import labels as lab
+    from repro.kernels.contour_mm.ops import contour_mm_step
+
+    g = gen.erdos_renyi(2_000, 5.0, seed=9)
+    L0 = jnp.arange(g.n_vertices, dtype=jnp.int32)
+    out = contour_mm_step(g.src, g.dst, L0, backend="auto")
+    ref = lab.mm_relax(L0, g.src, g.dst, order=2)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 
@@ -68,6 +200,7 @@ FLASH_CASES = [
 ]
 
 
+@pytest.mark.slow  # interpret-mode Pallas, 3-6s per case
 @pytest.mark.parametrize("b,h,hkv,t,hd,causal,dtype,blocks", FLASH_CASES)
 def test_flash_attention_sweep(b, h, hkv, t, hd, causal, dtype, blocks):
     from repro.kernels.flash_attention.ops import flash_attention
@@ -86,6 +219,7 @@ def test_flash_attention_sweep(b, h, hkv, t, hd, causal, dtype, blocks):
         atol=tol, rtol=tol)
 
 
+@pytest.mark.slow  # interpret-mode Pallas
 def test_flash_matches_model_attention_path():
     """Kernel vs the model's XLA chunked path (the dry-run lowering)."""
     from repro.kernels.flash_attention.ops import flash_attention
@@ -118,6 +252,7 @@ RMS_CASES = [
 ]
 
 
+@pytest.mark.slow  # interpret-mode Pallas
 @pytest.mark.parametrize("r,d,dtype", RMS_CASES)
 def test_fused_rmsnorm_sweep(r, d, dtype):
     from repro.kernels.fused_rmsnorm.ops import fused_rmsnorm

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # large-model forward/backward; excluded from the fast tier
+
 from repro.models.common import ModelConfig
 from repro.models.model import build_model
 

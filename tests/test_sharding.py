@@ -5,7 +5,9 @@ topologies are testable on a 1-CPU host.
 """
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.jax_compat import abstract_mesh
 
 from repro.configs import ARCHS, get_arch
 from repro.models import common as cm
@@ -14,11 +16,11 @@ from repro.models.common import ModelConfig, PROFILES
 
 
 def mesh_single():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_multi():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _cfg(**kw):

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-step training loops; excluded from the fast tier
+
 from repro.checkpoint.manager import (
     CheckpointManager, restore_checkpoint, save_checkpoint)
 from repro.configs import get_arch
