@@ -21,14 +21,30 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.contour import VARIANTS, contour_labels
-from repro.core.fastsv import fastsv_labels
-from repro.core.unionfind import rem_union_find
+import jax
+
+from repro.connectivity import SolveOptions, solve
+from repro.connectivity.contour import VARIANTS, contour_labels
 from repro.graphs import generators as gen
 from repro.graphs.oracle import connected_components_oracle, labels_equivalent
 from repro.kernels.contour_mm.ops import contour_cc_fixpoint
 
 METHODS = list(VARIANTS) + ["C-2-blk", "FastSV", "ConnectIt"]
+
+# Every method (except the raw kernel-path fixpoint) runs through the
+# unified repro.connectivity.solve facade — the bench doubles as an
+# integration check that one signature covers all families, and every
+# row uniformly includes the facade's (small) per-call overhead: option
+# resolution plus, for the host-side ConnectIt row, the edge-array
+# host/device conversions a real caller pays.  Contour variants pin
+# backend="xla" so the C-2 vs C-2-blk comparison isolates the
+# kernel-dispatch path.
+_METHOD_OPTIONS = {
+    m: SolveOptions(algorithm="contour", variant=m, backend="xla")
+    for m in VARIANTS
+}
+_METHOD_OPTIONS["FastSV"] = SolveOptions(algorithm="fastsv")
+_METHOD_OPTIONS["ConnectIt"] = SolveOptions(algorithm="union_find")
 
 
 @dataclasses.dataclass
@@ -43,49 +59,53 @@ class Record:
     correct: bool
 
 
+def _block(out):
+    for x in jax.tree_util.tree_leaves(out):
+        if hasattr(x, "block_until_ready"):
+            x.block_until_ready()
+
+
 def _time_jax(fn, repeats: int = 3):
-    """Best-of-k wall time for a jit'd callable returning jax arrays."""
+    """Best-of-k wall time for a callable returning a pytree of arrays."""
     out = fn()                      # warmup / compile
-    jtree = [x for x in (out if isinstance(out, tuple) else (out,))]
-    for x in jtree:
-        x.block_until_ready()
+    _block(out)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn()
-        for x in (out if isinstance(out, tuple) else (out,)):
-            x.block_until_ready()
+        _block(out)
         best = min(best, time.perf_counter() - t0)
     return out, best
 
 
 def bench_graph(name: str, gid: int, graph, *, repeats: int = 2,
                 methods: Optional[List[str]] = None) -> List[Record]:
-    src, dst, n = graph.src, graph.dst, graph.n_vertices
+    n = graph.n_vertices
     oracle = connected_components_oracle(*graph.to_numpy())
     records = []
     for method in methods or METHODS:
         # C-1 needs O(diameter) iterations (paper Fig. 1: up to 2369) —
-        # one timed run is plenty on long-diameter graphs
-        reps = 1 if method == "C-1" else repeats
-        if method == "FastSV":
-            fn = lambda: fastsv_labels(src, dst, n)
-            (labels, iters), dt = _time_jax(fn, repeats)
-            iters = int(iters)
-        elif method == "C-2-blk":
+        # one timed run is plenty on long-diameter graphs; ConnectIt is a
+        # sequential host loop, also timed once.
+        reps = 1 if method in ("C-1", "ConnectIt") else repeats
+        if method == "C-2-blk":
             fn = lambda: contour_cc_fixpoint(graph, backend="auto")
-            (labels, iters), dt = _time_jax(fn, reps)
+            (labels, iters, _), dt = _time_jax(fn, reps)
             iters = int(iters)
         elif method == "ConnectIt":
-            s_np, d_np, _ = graph.to_numpy()
+            # pure-NumPy host loop: nothing jit-compiles on its path
+            # (solvers report their own converged flag), so time the one
+            # run without a warmup pass
             t0 = time.perf_counter()
-            labels = rem_union_find(s_np, d_np, n)
+            result = solve(graph, _METHOD_OPTIONS[method])
+            _block(result)
             dt = time.perf_counter() - t0
-            iters = 1               # paper §IV-C convention
+            labels, iters = result.labels, int(result.iterations)
         else:
-            fn = lambda m=method: contour_labels(src, dst, n, variant=m)
-            (labels, iters), dt = _time_jax(fn, reps)
-            iters = int(iters)
+            opts = _METHOD_OPTIONS[method]
+            fn = lambda o=opts: solve(graph, o)
+            result, dt = _time_jax(fn, reps)
+            labels, iters = result.labels, int(result.iterations)
         ok = labels_equivalent(np.asarray(labels), oracle)
         records.append(Record(
             graph=name, graph_id=gid, n_vertices=n,

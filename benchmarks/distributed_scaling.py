@@ -21,7 +21,7 @@ BODY = textwrap.dedent("""
     import time
     import numpy as np
     import jax
-    from repro.core.distributed import distributed_contour
+    from repro.connectivity.distributed import distributed_contour
     from repro.graphs import generators as gen
     from repro.graphs.oracle import connected_components_oracle
 
@@ -38,7 +38,7 @@ BODY = textwrap.dedent("""
         oracle = connected_components_oracle(*g.to_numpy())
         for lr in (1, 2, 4):
             t0 = time.perf_counter()
-            labels, rounds = distributed_contour(
+            labels, rounds, _ = distributed_contour(
                 g, mesh, edge_axes=("data",), local_rounds=lr)
             dt = time.perf_counter() - t0
             ok = (np.asarray(labels) == oracle).all()

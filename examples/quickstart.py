@@ -1,28 +1,31 @@
-"""Quickstart: connected components with the Contour algorithm.
+"""Quickstart: connected components through the unified solve() API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a few graphs, runs every Contour variant plus the FastSV /
-ConnectIt baselines through the public API, and prints labels, iteration
-counts and timings.
+One facade covers every algorithm family: all Contour variants, FastSV,
+label propagation and the host-side ConnectIt stand-in run through
+``repro.solve`` with typed options and a typed result — then the demo
+warm-starts an incremental solve after adding edges, and batch-solves a
+fleet of graphs in one vmapped program.
 """
 import time
 
 import numpy as np
 
-from repro.core import contour, fastsv, label_propagation
-from repro.core.contour import VARIANTS, connected_components
-from repro.core.unionfind import rem_union_find
+from repro import Graph, SolveOptions, list_solvers, solve, solve_batch
+from repro.connectivity import VARIANTS
 from repro.graphs import generators as gen
-from repro.graphs.structs import Graph
 
 
 def main():
     # -- 1. tiny hand-made graph -------------------------------------------
     #   0-1-2   3-4   5 (isolated)
     g = Graph.from_numpy(np.array([0, 1, 3]), np.array([1, 2, 4]), 6)
-    labels = np.asarray(connected_components(g))
-    print("tiny graph labels:", labels.tolist())   # [0,0,0,3,3,5]
+    result = solve(g)
+    print("tiny graph labels:", np.asarray(result.labels).tolist())  # [0,0,0,3,3,5]
+    print(f"  {result.n_components} components, sizes "
+          f"{result.component_sizes().tolist()}, "
+          f"same_component(0, 2)={result.same_component(0, 2)}")
 
     # -- 2. variants on a long-diameter graph ------------------------------
     path = gen.path(100_000, seed=0)
@@ -34,30 +37,44 @@ def main():
                   "path — that is the point of the paper)")
             continue
         t0 = time.perf_counter()
-        labels, iters = contour(path, variant=variant)
-        labels.block_until_ready()
+        r = solve(path, variant=variant)
         dt = time.perf_counter() - t0
-        print(f"  {variant:7s}: {int(iters):3d} iterations, {dt*1e3:7.1f} ms")
+        print(f"  {variant:7s}: {int(r.iterations):3d} iterations, "
+              f"{dt*1e3:7.1f} ms, converged={bool(r.converged)}")
 
-    # -- 3. baselines -------------------------------------------------------
+    # -- 3. every registered solver family, one signature -------------------
     rmat = gen.rmat(14, seed=1)
-    print(f"\nrmat graph: n={rmat.n_vertices:,} m={rmat.n_edges:,}")
+    print(f"\nrmat graph: n={rmat.n_vertices:,} m={rmat.n_edges:,} — "
+          f"registered solvers: {', '.join(list_solvers())}")
+    for algorithm in ("contour", "fastsv", "label_propagation", "union_find"):
+        t0 = time.perf_counter()
+        r = solve(rmat, SolveOptions(algorithm=algorithm))
+        dt = time.perf_counter() - t0
+        print(f"  {algorithm:17s}: {int(r.iterations):3d} iterations, "
+              f"{dt*1e3:6.1f} ms, {r.n_components} components")
+
+    # -- 4. warm-start / incremental solving --------------------------------
+    base = gen.components_mix(
+        [gen.path(30_000, seed=2), gen.rmat(13, seed=3)], seed=4)
+    r0 = solve(base)
+    # connect the two halves with a handful of new edges
+    rng = np.random.default_rng(5)
+    grown = base.add_edges(rng.integers(0, 30_000, 4),
+                           rng.integers(30_000, base.n_vertices, 4))
+    r1 = solve(grown, warm_start=r0)
+    print(f"\nincremental: {r0.n_components} components "
+          f"-> {r1.n_components} after add_edges; "
+          f"warm-started solve took {int(r1.iterations)} iterations "
+          f"(cold start: {int(solve(grown).iterations)})")
+
+    # -- 5. batched multi-graph solving -------------------------------------
+    fleet = [gen.rmat(10, seed=s) for s in range(8)]
     t0 = time.perf_counter()
-    _, it = contour(rmat, variant="C-2")
-    print(f"  Contour C-2 : {int(it)} iterations, "
-          f"{(time.perf_counter()-t0)*1e3:6.1f} ms")
-    t0 = time.perf_counter()
-    _, it = fastsv(rmat)
-    print(f"  FastSV      : {int(it)} iterations, "
-          f"{(time.perf_counter()-t0)*1e3:6.1f} ms")
-    t0 = time.perf_counter()
-    rem_union_find(*rmat.to_numpy())
-    print(f"  ConnectIt   : 1 pass,        "
-          f"{(time.perf_counter()-t0)*1e3:6.1f} ms (host union-find)")
-    t0 = time.perf_counter()
-    _, it = label_propagation(rmat)
-    print(f"  LabelProp   : {int(it)} iterations, "
-          f"{(time.perf_counter()-t0)*1e3:6.1f} ms")
+    batch = solve_batch(fleet)
+    dt = time.perf_counter() - t0
+    comps = [r.n_components for r in batch.unstack()]
+    print(f"\nbatched: {len(fleet)} rmat graphs in one vmapped solve "
+          f"({dt*1e3:.1f} ms): components per graph {comps}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import distributed_contour_step_fn
+from repro.connectivity.distributed import distributed_contour_step_fn
 from repro.launch.dryrun import CONTOUR_N_EDGES, CONTOUR_N_VERTICES
 from repro.launch.mesh import make_production_mesh
 from repro.roofline import analyze_compiled

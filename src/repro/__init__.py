@@ -1,0 +1,32 @@
+"""Reproduction of "Contour Algorithm for Connectivity" on JAX/Pallas.
+
+The unified connectivity API re-exported at top level::
+
+    from repro import solve, SolveOptions, ComponentResult, Graph
+
+    result = solve(graph)          # Contour C-2, auto kernel dispatch
+    result.n_components
+    result.same_component(u, v)
+
+See ``repro.connectivity`` for the full surface (solver registry, warm
+starts, batched solving) and README.md for a quickstart.
+"""
+from repro.connectivity import (
+    ComponentResult,
+    Graph,
+    SolveOptions,
+    list_solvers,
+    register_solver,
+    solve,
+    solve_batch,
+)
+
+__all__ = [
+    "ComponentResult",
+    "Graph",
+    "SolveOptions",
+    "list_solvers",
+    "register_solver",
+    "solve",
+    "solve_batch",
+]

@@ -1,0 +1,53 @@
+"""``repro.connectivity`` — the unified public connectivity API.
+
+One facade over every algorithm family the reproduction implements::
+
+    from repro.connectivity import solve, SolveOptions
+
+    result = solve(graph)                                # Contour C-2
+    result = solve(graph, SolveOptions(algorithm="fastsv"))
+    result.n_components, result.component_sizes()
+    result.same_component(u, v)
+
+Warm-start / incremental::
+
+    bigger = graph.add_edges(new_src, new_dst)
+    result2 = solve(bigger, warm_start=result)
+
+Batched multi-graph::
+
+    batch = solve_batch([g1, g2, g3])
+    for r in batch.unstack(): ...
+
+The old per-algorithm entry points in ``repro.core`` remain as deprecation
+shims; new code should import from here (or ``from repro import solve``).
+"""
+from repro.connectivity.options import SolveOptions
+from repro.connectivity.result import ComponentResult
+from repro.connectivity.registry import (
+    SolverSpec,
+    get_solver,
+    list_solvers,
+    register_solver,
+    solver_specs,
+)
+from repro.connectivity import solvers as _solvers  # registers the families
+from repro.connectivity.solve import solve
+from repro.connectivity.batch import solve_batch, stack_graphs
+from repro.connectivity.contour import VARIANTS
+from repro.graphs.structs import Graph
+
+__all__ = [
+    "ComponentResult",
+    "Graph",
+    "SolveOptions",
+    "SolverSpec",
+    "VARIANTS",
+    "get_solver",
+    "list_solvers",
+    "register_solver",
+    "solve",
+    "solve_batch",
+    "solver_specs",
+    "stack_graphs",
+]

@@ -1,0 +1,151 @@
+"""Batched multi-graph solving: ``solve_batch`` over padded graphs.
+
+Many production scenarios solve *fleets* of small graphs (per-shard dedup
+clusters, per-request subgraphs) rather than one giant graph.  Padding
+every graph to a common shape makes the whole fleet one ``vmap``-ed solve:
+edge lists pad with self-loops (no-ops for every min-based solver) and
+vertex counts pad with isolated vertices (self-labelled singletons), so
+padding never changes any real vertex's label.
+
+Under ``vmap`` the solvers' ``lax.while_loop`` runs until the *slowest*
+graph converges, with already-converged graphs' updates masked — per-graph
+iteration counts stay exact.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectivity import minmap
+from repro.connectivity.options import SolveOptions
+from repro.connectivity.result import ComponentResult
+from repro.connectivity.solve import _resolve, resolve_warm_start
+from repro.graphs.structs import Graph
+
+
+def stack_graphs(graphs: Sequence[Graph]) -> Graph:
+    """Pad ``graphs`` to a common shape and stack into one batched Graph.
+
+    The result has ``src``/``dst`` of shape ``[B, max_m]`` and
+    ``n_vertices = max_n``; edge padding is self-loops at vertex 0.
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("stack_graphs needs at least one graph")
+    n = max(g.n_vertices for g in graphs)
+    m = max(max(g.n_edges for g in graphs), 1)
+    padded = [g.pad_edges(m) for g in graphs]
+    return Graph(
+        src=jnp.stack([g.src for g in padded]),
+        dst=jnp.stack([g.dst for g in padded]),
+        n_vertices=n,
+    )
+
+
+def _stack_warm_starts(warm_start, graphs: List[Graph], n: int):
+    """Per-graph warm starts -> one [B, n] array (or None)."""
+    if warm_start is None:
+        return None
+    if not isinstance(warm_start, (list, tuple)):
+        ws = jnp.asarray(
+            warm_start.labels if isinstance(warm_start, ComponentResult)
+            else warm_start)
+        if ws.ndim != 2 or ws.shape[0] != len(graphs):
+            raise ValueError(
+                f"batched warm_start must be a [B, n] array or a per-graph "
+                f"sequence; got shape {ws.shape} for B={len(graphs)}")
+        # stacked rows are padded to the batch-wide max n; trim each back
+        # to its graph (the padding region is identity labels anyway)
+        warm_start = [ws[i, :min(ws.shape[1], g.n_vertices)]
+                      for i, g in enumerate(graphs)]
+    if len(warm_start) != len(graphs):
+        raise ValueError(
+            f"warm_start has {len(warm_start)} entries for "
+            f"{len(graphs)} graphs")
+    rows = []
+    for w, g in zip(warm_start, graphs):
+        row = resolve_warm_start(w, g.n_vertices)
+        row = minmap.resolve_init_labels(row, n, jnp.int32)
+        rows.append(row)
+    return jnp.stack(rows)
+
+
+def solve_batch(
+    graphs: Union[Sequence[Graph], Graph],
+    options: Optional[SolveOptions] = None,
+    *,
+    warm_start=None,
+    **overrides,
+) -> ComponentResult:
+    """Solve connectivity on a batch of graphs in one vmapped program.
+
+    Args:
+      graphs: a sequence of :class:`Graph` (padded/stacked automatically)
+        or an already-batched Graph with ``[B, m]`` edge arrays.
+      options / overrides: as for :func:`repro.connectivity.solve`.
+      warm_start: per-graph previous labels — a sequence (arrays or
+        :class:`ComponentResult`) or a stacked ``[B, n]`` array.
+
+    Returns:
+      a batched :class:`ComponentResult` (``labels [B, n]``,
+      ``iterations [B]``, ``converged [B]``); ``unstack()`` splits it into
+      per-graph results trimmed to each graph's original vertex count.
+    """
+    opts, spec = _resolve(options, overrides)
+    if opts.mesh is not None:
+        raise ValueError("solve_batch is single-device (vmap); it does not "
+                         "compose with SolveOptions.mesh")
+    if warm_start is None:
+        warm_start = opts.warm_start  # same fallback as solve()
+
+    if isinstance(graphs, Graph):
+        batched = graphs
+        sizes = tuple([batched.n_vertices] * int(batched.src.shape[0]))
+        per_graph = [
+            Graph(src=batched.src[i], dst=batched.dst[i],
+                  n_vertices=batched.n_vertices)
+            for i in range(int(batched.src.shape[0]))
+        ]
+    else:
+        per_graph = list(graphs)
+        sizes = tuple(g.n_vertices for g in per_graph)
+        batched = stack_graphs(per_graph)
+    n = batched.n_vertices
+
+    init_b = _stack_warm_starts(warm_start, per_graph, n)
+    if init_b is not None and not spec.supports_warm_start:
+        raise ValueError(f"solver {spec.name!r} does not support warm "
+                         "starts")
+
+    if spec.supports_batch:
+        def one(s, d, L0):
+            return spec.fn(Graph(src=s, dst=d, n_vertices=n), opts, L0)
+
+        if init_b is None:
+            labels, iterations, converged = jax.vmap(
+                lambda s, d: one(s, d, None))(batched.src, batched.dst)
+        else:
+            labels, iterations, converged = jax.vmap(one)(
+                batched.src, batched.dst, init_b)
+    elif spec.runs_on == "host":
+        # sequential host solver (union-find): plain per-graph loop over
+        # the *original* edge lists (padding buys nothing without vmap)
+        outs = []
+        for i, g in enumerate(per_graph):
+            init_i = None if init_b is None else init_b[i]
+            outs.append(spec.fn(Graph(src=g.src, dst=g.dst, n_vertices=n),
+                                opts, init_i))
+        labels = jnp.stack([L for L, _, _ in outs])
+        iterations = jnp.stack([jnp.asarray(it, jnp.int32)
+                                for _, it, _ in outs])
+        converged = jnp.stack([jnp.asarray(c, bool) for _, _, c in outs])
+    else:
+        raise ValueError(
+            f"solver {spec.name!r} does not support batched solving")
+
+    return ComponentResult(labels=labels,
+                           iterations=jnp.asarray(iterations, jnp.int32),
+                           converged=jnp.asarray(converged, bool),
+                           batch_sizes=sizes)

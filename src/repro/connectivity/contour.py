@@ -1,0 +1,199 @@
+"""The Contour connectivity algorithm (paper Alg. 1) and its six variants.
+
+Variants (paper §III-B4):
+
+* ``C-Syn``  — Alg. 1 verbatim: synchronous 2-order sweeps, double
+  buffered, plain no-change convergence test.
+* ``C-1``    — 1-order operator + async recompaction + early check.
+* ``C-2``    — 2-order operator + async recompaction + early check
+  (the paper's default).
+* ``C-m``    — high-order operator: realised as a 2-order edge sweep
+  followed by ``log2(m)`` pointer-jump rounds (same fixed point as the
+  literal L^m chain; DESIGN.md §3).
+* ``C-11mm`` — ``warmup`` iterations of C-1 then C-m until convergence.
+* ``C-1m1m`` — alternate C-1 and C-m per iteration.
+
+Every variant is a pure function of the edge list, runs under ``jax.jit``
+with a ``lax.while_loop``, and returns ``(labels, n_iterations)``.
+
+The MM sweep itself is routed through the ``kernels.contour_mm`` dispatch
+layer: ``backend="xla"`` (default) is the scatter-min realisation,
+``backend="pallas_blocked"`` the label-blocked vectorized TPU kernel and
+``backend="auto"`` picks per platform/graph size
+(`ops.plan_contour_kernel`) — so every variant can run on every backend.
+A resolved :class:`~repro.kernels.contour_mm.ops.KernelPlan` can be passed
+explicitly (``plan=``) to pin tile sizes; the ``repro.connectivity.solve``
+facade threads the plan it resolves this way.
+
+``init_labels`` warm-starts the fixpoint from a previous solve's labels
+(see :func:`repro.connectivity.minmap.resolve_init_labels` for why that is
+correct); labels decrease monotonically from the given start.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectivity import minmap as lab
+from repro.graphs.structs import Graph
+from repro.kernels.contour_mm import ops as mm_ops
+
+VARIANTS = ("C-Syn", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m")
+
+# C-m's effective order: the paper uses m = 1024; log2(1024) = 10 jump
+# rounds after the 2-order edge sweep covers the same mapping depth.
+_CM_JUMP_ROUNDS = 10
+
+
+class ContourState(NamedTuple):
+    L: jax.Array
+    it: jax.Array          # int32 iteration counter
+    done: jax.Array        # bool
+
+
+def _make_relax(backend, plan):
+    """relax(L, src, dst, order) on the chosen backend/tile plan."""
+    if plan is None:
+        def relax(L, src, dst, order):
+            return mm_ops.mm_relax_backend(L, src, dst, order=order,
+                                           backend=backend)
+    else:
+        def relax(L, src, dst, order):
+            return mm_ops.mm_relax_backend(
+                L, src, dst, order=order, backend=backend,
+                block_edges=plan.block_edges, label_block=plan.label_block,
+                chunk_updates=plan.chunk_updates, interpret=plan.interpret)
+    return relax
+
+
+def _make_step(variant: str, warmup: int, async_compress: int,
+               backend: str = "xla", plan=None):
+    """Return step(L, it, src, dst) -> L_new for the chosen variant."""
+    relax = _make_relax(backend, plan)
+
+    def sweep_sync(L, src, dst, order):
+        """Alg. 1 body: one synchronous MM^order sweep."""
+        return relax(L, src, dst, order)
+
+    def sweep_async(L, src, dst, order, jump_rounds):
+        """Optimised sweep: MM^order + pointer-jump recompaction.
+
+        ``jump_rounds`` realises high-order variants; ``async_compress``
+        is the async-update adaptation (spreads freshly lowered labels
+        inside the same iteration, mirroring the paper's in-place
+        updates).
+        """
+        L = relax(L, src, dst, order)
+        return lab.pointer_jump(L, rounds=jump_rounds + async_compress)
+
+    if variant == "C-Syn":
+        def step(L, it, src, dst):
+            del it
+            return sweep_sync(L, src, dst, 2)
+    elif variant == "C-1":
+        def step(L, it, src, dst):
+            del it
+            return sweep_async(L, src, dst, 1, 0)
+    elif variant == "C-2":
+        def step(L, it, src, dst):
+            del it
+            return sweep_async(L, src, dst, 2, 0)
+    elif variant == "C-m":
+        def step(L, it, src, dst):
+            del it
+            return sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS)
+    elif variant == "C-11mm":
+        def step(L, it, src, dst):
+            return jax.lax.cond(
+                it < warmup,
+                lambda L: sweep_async(L, src, dst, 1, 0),
+                lambda L: sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS),
+                L,
+            )
+    elif variant == "C-1m1m":
+        def step(L, it, src, dst):
+            return jax.lax.cond(
+                it % 2 == 0,
+                lambda L: sweep_async(L, src, dst, 1, 0),
+                lambda L: sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS),
+                L,
+            )
+    elif variant.startswith("C-") and variant[2:].isdigit():
+        # literal h-order minimum-mapping operator (Definition 3): the
+        # length-h gather chain per edge, exactly as written in the paper.
+        # The named C-m variant realises high orders via pointer jumping
+        # instead (same fixed point, TPU-vectorisable — DESIGN.md §3);
+        # this literal form exists to validate that equivalence.
+        order = int(variant[2:])
+
+        def step(L, it, src, dst):
+            del it
+            return sweep_async(L, src, dst, order, 0)
+    else:
+        raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS} "
+                         "or literal 'C-<h>'")
+    return step
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_vertices", "variant", "max_iters", "warmup",
+                     "async_compress", "backend", "plan"),
+)
+def contour_labels(
+    src: jax.Array,
+    dst: jax.Array,
+    n_vertices: int,
+    init_labels: Optional[jax.Array] = None,
+    *,
+    variant: str = "C-2",
+    max_iters: int = 100_000,
+    warmup: int = 2,
+    async_compress: int = 1,
+    backend: str = "xla",
+    plan=None,
+):
+    """Run Contour; returns (labels[n], n_iterations, converged).
+
+    Labels converge to the minimum vertex id of each component;
+    ``converged`` is the loop's own fixed-point flag (False iff the
+    ``max_iters`` budget ran out first).  ``init_labels`` warm-starts
+    from a previous solve (labels only ever decrease from the given
+    start); ``plan`` pins kernel tile sizes.
+    """
+    step = _make_step(variant, warmup, async_compress, backend, plan)
+    sync = variant == "C-Syn"
+    L0 = lab.resolve_init_labels(init_labels, n_vertices, src.dtype)
+
+    def cond(s: ContourState):
+        return (~s.done) & (s.it < max_iters)
+
+    def body(s: ContourState):
+        L_new = step(s.L, s.it, src, dst)
+        if sync:
+            done = jnp.all(L_new == s.L)  # Alg. 1 line 10: no label change
+        else:
+            done = lab.converged_early(L_new, src, dst)  # paper §III-B2
+        return ContourState(L=L_new, it=s.it + 1, done=done)
+
+    init = ContourState(L=L0, it=jnp.int32(0), done=jnp.array(False))
+    out = jax.lax.while_loop(cond, body, init)
+    # Final compression: at the early-convergence point the pointer graph
+    # restricted to edge endpoints is a star forest; interior tree vertices
+    # of padded/isolated chains may still be one hop away.
+    L = lab.pointer_jump(out.L, rounds=1)
+    return L, out.it, out.done
+
+
+def contour(graph: Graph, **kw):
+    """Convenience wrapper over :func:`contour_labels`."""
+    return contour_labels(graph.src, graph.dst, graph.n_vertices, **kw)
+
+
+def connected_components(graph: Graph, variant: str = "C-2") -> jax.Array:
+    """Min-vertex-id component labels (prefer ``repro.connectivity.solve``)."""
+    L, _, _ = contour(graph, variant=variant)
+    return L

@@ -1,0 +1,68 @@
+"""Typed options for the unified connectivity ``solve()`` facade.
+
+:class:`SolveOptions` replaces the scattered string/int kwargs of the old
+per-algorithm entry points (``contour_labels``, ``fastsv_labels``, ...)
+with one frozen dataclass that every registered solver understands.  The
+fields mirror the three decision layers of the system:
+
+* **algorithm selection** — ``algorithm`` (registry name or alias) and
+  ``variant`` (Contour's ``C-Syn``/``C-1``/``C-2``/``C-m``/``C-11mm``/
+  ``C-1m1m`` or a literal ``C-<h>``);
+* **kernel dispatch** — ``backend`` (``"auto"`` resolves through
+  ``plan_contour_kernel``) or an explicit resolved
+  :class:`~repro.kernels.contour_mm.ops.KernelPlan` in ``plan``;
+* **placement** — ``mesh``/``edge_axes``/``local_rounds`` route the solve
+  through the ``shard_map`` distributed path; ``mesh=None`` (default) is
+  single-device.
+
+``warm_start`` carries the previous solve's labels (or a whole
+:class:`~repro.connectivity.result.ComponentResult`) for incremental
+solving; it may equivalently be passed per-call to ``solve()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.kernels.contour_mm.ops import BACKENDS, KernelPlan
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SolveOptions:
+    """Options for :func:`repro.connectivity.solve`.
+
+    ``eq=False`` keeps instances identity-hashed: ``warm_start`` may hold
+    a device array, which has no value equality.
+    """
+
+    algorithm: str = "contour"
+    variant: Optional[str] = None          # per-algorithm default if None
+    backend: str = "auto"
+    plan: Optional[KernelPlan] = None      # explicit tile plan (else auto)
+    mesh: Optional[jax.sharding.Mesh] = None
+    edge_axes: Tuple[str, ...] = ("data",)
+    local_rounds: int = 1
+    max_iters: Optional[int] = None        # per-algorithm default if None
+    warmup: int = 2                        # C-11mm's C-1 prefix length
+    async_compress: int = 1                # in-iteration pointer-jump rounds
+    warm_start: Optional[Any] = None       # labels array or ComponentResult
+
+    def replace(self, **updates) -> "SolveOptions":
+        """Return a copy with the given fields replaced."""
+        return dataclasses.replace(self, **updates)
+
+    def validate(self) -> None:
+        """Cheap structural checks; registry-level checks live in solve()."""
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend {self.backend!r} not one of {BACKENDS}")
+        if self.local_rounds < 1:
+            raise ValueError(f"local_rounds must be >= 1, got "
+                             f"{self.local_rounds}")
+        if self.max_iters is not None and self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        if self.mesh is not None and not self.edge_axes:
+            raise ValueError("edge_axes must be non-empty when a mesh is "
+                             "given")

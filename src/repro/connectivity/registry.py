@@ -1,0 +1,90 @@
+"""Solver registry: every connectivity algorithm family behind one signature.
+
+A registered solver is a callable
+
+    fn(graph: Graph, opts: SolveOptions, init_labels)
+        -> (labels, iterations, converged)
+
+where ``init_labels`` is the resolved warm-start array (or None for a
+cold start) and ``converged`` is the solver's own fixed-point flag
+(False iff the iteration budget ran out).  The ``solve()`` facade looks solvers up here, so adding an
+algorithm family is one ``@register_solver`` away — no facade changes.
+
+The registry also records capability flags (warm start, batched ``vmap``
+solving, mesh execution, host vs device) that ``solve()``/``solve_batch``
+use to fail fast with a clear message instead of deep in a trace, plus the
+paper section each family reproduces (surfaced in DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+_REGISTRY: Dict[str, "SolverSpec"] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """One registered algorithm family."""
+
+    name: str
+    fn: Callable                         # (graph, opts, init) -> (L, it, done)
+    aliases: Tuple[str, ...] = ()
+    variants: Tuple[str, ...] = ()       # () = takes no variant
+    default_variant: Optional[str] = None
+    default_max_iters: int = 100_000
+    supports_warm_start: bool = True
+    supports_batch: bool = True          # solvable under jax.vmap
+    supports_mesh: bool = False          # runs on a Mesh via shard_map
+    runs_on: str = "device"              # "device" | "host"
+    paper_ref: str = ""                  # paper section this reproduces
+
+    def validate_variant(self, variant: Optional[str]) -> Optional[str]:
+        """Resolve/validate a requested variant for this solver."""
+        if variant is None:
+            return self.default_variant
+        if not self.variants:
+            raise ValueError(
+                f"solver {self.name!r} takes no variant, got {variant!r}")
+        if variant in self.variants:
+            return variant
+        # Contour accepts literal h-order variants "C-<h>" beyond the
+        # named set (used to validate the pointer-jump equivalence).
+        if ("C-<h>" in self.variants and variant.startswith("C-")
+                and variant[2:].isdigit()):
+            return variant
+        raise ValueError(
+            f"unknown variant {variant!r} for solver {self.name!r}; "
+            f"one of {self.variants}")
+
+
+def register_solver(spec: SolverSpec) -> SolverSpec:
+    """Register (or replace) a solver family; returns the spec."""
+    _REGISTRY[spec.name] = spec
+    for alias in spec.aliases:
+        _ALIASES[alias] = spec.name
+    return spec
+
+
+def resolve_name(name: str) -> str:
+    """Canonical solver name for ``name`` (which may be an alias)."""
+    if name in _REGISTRY:
+        return name
+    if name in _ALIASES:
+        return _ALIASES[name]
+    known = sorted(_REGISTRY) + sorted(_ALIASES)
+    raise ValueError(f"unknown algorithm {name!r}; known: {known}")
+
+
+def get_solver(name: str) -> SolverSpec:
+    return _REGISTRY[resolve_name(name)]
+
+
+def list_solvers() -> Tuple[str, ...]:
+    """Canonical names of every registered solver family."""
+    return tuple(sorted(_REGISTRY))
+
+
+def solver_specs() -> Tuple[SolverSpec, ...]:
+    return tuple(_REGISTRY[k] for k in list_solvers())

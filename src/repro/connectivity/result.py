@@ -1,0 +1,113 @@
+"""Typed result of a connectivity solve: labels + lazy component views.
+
+:class:`ComponentResult` is a frozen dataclass registered as a pytree so
+it can flow through ``jax.jit`` / ``jax.vmap`` unchanged (the lazy host
+views are *not* part of the pytree — they are derived caches, recomputed
+after any transformation).
+
+Labels follow the Contour fixed-point convention: the label of a vertex is
+the minimum vertex id of its component.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class ComponentResult:
+    """Component labels plus solve metadata.
+
+    Attributes:
+      labels: int32[n] min-vertex-id component labels (``[B, n]`` for a
+        batched solve — see :meth:`unstack`).
+      iterations: int32 scalar (``[B]`` batched) iteration count.
+      converged: bool scalar (``[B]`` batched) — True iff the solver hit
+        the connectivity fixed point before ``max_iters``.
+      batch_sizes: static per-graph vertex counts of a batched solve
+        (None for a single solve); used by :meth:`unstack` to trim padded
+        vertices.
+    """
+
+    labels: jax.Array
+    iterations: jax.Array
+    converged: jax.Array
+    batch_sizes: Optional[Tuple[int, ...]] = None
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.labels, self.iterations, self.converged), self.batch_sizes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        labels, iterations, converged = children
+        return cls(labels=labels, iterations=iterations, converged=converged,
+                   batch_sizes=aux)
+
+    # -- lazy host-side views --------------------------------------------
+    @property
+    def is_batched(self) -> bool:
+        return getattr(self.labels, "ndim", 1) > 1
+
+    def _require_single(self, what: str):
+        if self.is_batched:
+            raise ValueError(
+                f"{what} is per-graph; this is a batched result — call "
+                ".unstack() first")
+
+    @functools.cached_property
+    def _np_labels(self) -> np.ndarray:
+        return np.asarray(self.labels)
+
+    @functools.cached_property
+    def _uniq(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(unique labels, dense inverse, counts) — computed once."""
+        self._require_single("component decomposition")
+        return np.unique(self._np_labels, return_inverse=True,
+                         return_counts=True)
+
+    @property
+    def n_components(self) -> int:
+        """Number of connected components."""
+        return int(self._uniq[0].size)
+
+    def compact_labels(self) -> np.ndarray:
+        """Dense ``0..k-1`` relabeling (component order = ascending min id)."""
+        return self._uniq[1].astype(np.int32)
+
+    def component_sizes(self) -> np.ndarray:
+        """Vertex count per component, indexed like :meth:`compact_labels`."""
+        return self._uniq[2]
+
+    def same_component(self, u, v):
+        """True iff ``u`` and ``v`` are connected (vectorises over arrays)."""
+        self._require_single("same_component")
+        L = self._np_labels
+        out = L[np.asarray(u)] == L[np.asarray(v)]
+        return bool(out) if np.ndim(out) == 0 else out
+
+    # -- batched results -------------------------------------------------
+    def unstack(self) -> List["ComponentResult"]:
+        """Split a batched result into per-graph results.
+
+        Padded vertices (ids >= the graph's original ``n_vertices``) are
+        isolated self-labelled singletons; ``batch_sizes`` trims them away
+        so each returned result matches its source graph exactly.
+        """
+        if not self.is_batched:
+            return [self]
+        n_graphs = int(self.labels.shape[0])
+        sizes = self.batch_sizes or (self.labels.shape[1],) * n_graphs
+        return [
+            ComponentResult(
+                labels=self.labels[i, :sizes[i]],
+                iterations=self.iterations[i],
+                converged=self.converged[i],
+            )
+            for i in range(n_graphs)
+        ]

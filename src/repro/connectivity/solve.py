@@ -1,0 +1,130 @@
+"""The unified connectivity facade: ``solve(graph, options) -> ComponentResult``.
+
+One entry point for every algorithm family the reproduction implements
+(all Contour variants, FastSV, label propagation, host-side Rem
+union-find, and the ``shard_map`` distributed path), with:
+
+* **typed options** — :class:`~repro.connectivity.options.SolveOptions`
+  replaces per-algorithm string kwargs;
+* **automatic dispatch** — ``backend="auto"`` resolves kernels through
+  ``plan_contour_kernel``; setting ``SolveOptions.mesh`` routes a Contour
+  solve through the distributed path;
+* **warm starts** — pass a previous :class:`ComponentResult` (or a raw
+  label array) to continue after ``Graph.add_edges``: min-mapping labels
+  only decrease, so the old fixed point is a correct head start
+  (``minmap.resolve_init_labels``).
+
+Example::
+
+    from repro import solve, SolveOptions, Graph
+
+    result = solve(graph)                               # Contour C-2
+    result = solve(graph, SolveOptions(algorithm="fastsv"))
+    result = solve(graph, algorithm="contour", variant="C-m")
+
+    bigger = graph.add_edges(new_src, new_dst)
+    result2 = solve(bigger, warm_start=result)          # incremental
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectivity.options import SolveOptions
+from repro.connectivity.registry import SolverSpec, get_solver
+from repro.connectivity.result import ComponentResult
+from repro.graphs.structs import Graph
+
+
+def resolve_warm_start(warm_start, n_vertices: int):
+    """Normalise a warm start to a label array (or None).
+
+    Accepts a previous :class:`ComponentResult`, any array-like of labels,
+    or None.  Only the *shape class* is checked here; length/validity
+    normalisation (graph growth, the ``L[v] <= v`` invariant, the
+    too-long error) lives in :func:`minmap.resolve_init_labels` — the
+    single validator every solver funnels through.
+    """
+    del n_vertices  # length is validated by minmap.resolve_init_labels
+    if warm_start is None:
+        return None
+    if isinstance(warm_start, ComponentResult):
+        if warm_start.is_batched:
+            raise ValueError(
+                "warm_start is a batched ComponentResult; unstack() it or "
+                "use solve_batch")
+        warm_start = warm_start.labels
+    labels = jnp.asarray(warm_start)
+    if labels.ndim != 1:
+        raise ValueError(
+            f"warm_start labels must be 1-D, got shape {labels.shape}")
+    return labels
+
+
+def _resolve(options: Optional[SolveOptions],
+             overrides) -> tuple[SolveOptions, SolverSpec]:
+    """Validate options and pick the solver (mesh-aware)."""
+    opts = options if options is not None else SolveOptions()
+    if not isinstance(opts, SolveOptions):
+        raise TypeError(
+            f"options must be SolveOptions, got {type(opts).__name__}")
+    if overrides:
+        opts = opts.replace(**overrides)
+    opts.validate()
+    spec = get_solver(opts.algorithm)
+    if opts.mesh is not None:
+        if not spec.supports_mesh:
+            raise ValueError(
+                f"solver {spec.name!r} does not run on a mesh; use "
+                "algorithm='contour' (or 'distributed')")
+        if spec.name == "contour":
+            # automatic single-device vs mesh dispatch
+            spec = get_solver("distributed")
+    opts = opts.replace(
+        variant=spec.validate_variant(opts.variant),
+        # registry default is the single source of per-solver budgets
+        max_iters=(spec.default_max_iters if opts.max_iters is None
+                   else opts.max_iters),
+    )
+    return opts, spec
+
+
+def solve(
+    graph: Graph,
+    options: Optional[SolveOptions] = None,
+    *,
+    warm_start: Union[None, ComponentResult, jax.Array] = None,
+    **overrides,
+) -> ComponentResult:
+    """Solve connectivity on ``graph``; returns a :class:`ComponentResult`.
+
+    Args:
+      graph: edge-list :class:`Graph` (each undirected edge once).
+      options: a :class:`SolveOptions`; defaults to Contour C-2 with
+        automatic kernel dispatch.
+      warm_start: previous labels (array or :class:`ComponentResult`) to
+        continue from — e.g. after :meth:`Graph.add_edges`.  Overrides
+        ``options.warm_start``.
+      **overrides: per-call :class:`SolveOptions` field overrides, e.g.
+        ``solve(g, algorithm="fastsv")``.
+
+    Returns:
+      :class:`ComponentResult` with min-vertex-id ``labels``, the solver's
+      ``iterations`` count, and a ``converged`` flag (each solver's own
+      fixed-point test from its final loop state — the paper's §III-B2
+      predicate for the min-mapping family; False iff the ``max_iters``
+      budget ran out first).
+    """
+    opts, spec = _resolve(options, overrides)
+    init = resolve_warm_start(
+        warm_start if warm_start is not None else opts.warm_start,
+        graph.n_vertices)
+    if init is not None and not spec.supports_warm_start:
+        raise ValueError(f"solver {spec.name!r} does not support warm "
+                         "starts")
+    labels, iterations, converged = spec.fn(graph, opts, init)
+    return ComponentResult(labels=labels,
+                           iterations=jnp.asarray(iterations, jnp.int32),
+                           converged=jnp.asarray(converged, bool))

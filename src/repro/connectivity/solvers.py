@@ -1,0 +1,135 @@
+"""Registered solver families wrapping every existing implementation.
+
+Five families, one signature (DESIGN.md §9 maps them onto the paper):
+
+* ``contour``           — paper §III-B, all variants (Alg. 1 + §III-B4),
+  any ``kernels.contour_mm`` backend, single device.
+* ``distributed``       — paper §III-B over a device mesh (§IV Arkouda
+  mapping): ``shard_map`` edge-sharded Contour C-2.  ``solve()`` routes
+  ``contour`` here automatically when ``SolveOptions.mesh`` is set.
+* ``fastsv``            — paper §III-C, the Shiloach-Vishkin family
+  (Zhang, Azad & Hu).
+* ``label_propagation`` — paper §I/§V traversal-family strawman.
+* ``union_find``        — paper §III-C ConnectIt stand-in (host-side
+  Rem's algorithm with splicing).
+"""
+from __future__ import annotations
+
+from repro.connectivity import contour as _contour
+from repro.connectivity import distributed as _distributed
+from repro.connectivity import fastsv as _fastsv
+from repro.connectivity import lp as _lp
+from repro.connectivity import unionfind as _unionfind
+from repro.connectivity.registry import SolverSpec, register_solver
+from repro.kernels.contour_mm import ops as mm_ops
+
+
+def resolve_backend_plan(n_vertices: int, n_edges: int, opts):
+    """Concrete (backend, plan) for a solve.
+
+    ``backend="auto"`` resolves through :func:`plan_contour_kernel` — the
+    shared autotune layer — unless the caller pinned an explicit plan.
+    """
+    plan = opts.plan
+    backend = opts.backend
+    if backend == "auto":
+        if plan is None:
+            plan = mm_ops.plan_contour_kernel(n_vertices, n_edges)
+        backend = plan.backend
+    return backend, plan
+
+
+def _contour_solver(graph, opts, init_labels):
+    backend, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
+                                         opts)
+    return _contour.contour_labels(
+        graph.src, graph.dst, graph.n_vertices, init_labels,
+        variant=opts.variant or "C-2",
+        max_iters=opts.max_iters,
+        warmup=opts.warmup,
+        async_compress=opts.async_compress,
+        backend=backend,
+        plan=plan,
+    )
+
+
+def _distributed_solver(graph, opts, init_labels):
+    if opts.mesh is None:
+        raise ValueError(
+            "the 'distributed' solver needs SolveOptions.mesh (a "
+            "jax.sharding.Mesh); for single-device solves use "
+            "algorithm='contour'")
+    return _distributed.distributed_contour(
+        graph, opts.mesh,
+        edge_axes=tuple(opts.edge_axes),
+        local_rounds=opts.local_rounds,
+        max_iters=opts.max_iters,
+        async_compress=opts.async_compress,
+        backend=opts.backend,
+        init_labels=init_labels,
+    )
+
+
+def _fastsv_solver(graph, opts, init_labels):
+    return _fastsv.fastsv_labels(graph.src, graph.dst, graph.n_vertices,
+                                 init_labels,
+                                 max_iters=opts.max_iters)
+
+
+def _lp_solver(graph, opts, init_labels):
+    return _lp.label_propagation_labels(graph.src, graph.dst,
+                                        graph.n_vertices, init_labels,
+                                        max_iters=opts.max_iters)
+
+
+def _union_find_solver(graph, opts, init_labels):
+    return _unionfind.rem_labels(graph.src, graph.dst, graph.n_vertices,
+                                 init_labels=init_labels)
+
+
+CONTOUR = register_solver(SolverSpec(
+    name="contour",
+    fn=_contour_solver,
+    variants=_contour.VARIANTS + ("C-<h>",),
+    default_variant="C-2",
+    default_max_iters=100_000,
+    supports_mesh=True,          # via automatic routing to 'distributed'
+    paper_ref="§III-B (Alg. 1, variants §III-B4)",
+))
+
+DISTRIBUTED = register_solver(SolverSpec(
+    name="distributed",
+    fn=_distributed_solver,
+    aliases=("contour_distributed",),
+    variants=("C-2",),
+    default_variant="C-2",
+    default_max_iters=10_000,
+    supports_batch=False,        # shard_map placement, not vmappable
+    supports_mesh=True,
+    paper_ref="§III-B over §IV's distributed mapping",
+))
+
+FASTSV = register_solver(SolverSpec(
+    name="fastsv",
+    fn=_fastsv_solver,
+    default_max_iters=256,
+    paper_ref="§III-C (FastSV / Shiloach-Vishkin family)",
+))
+
+LABEL_PROPAGATION = register_solver(SolverSpec(
+    name="label_propagation",
+    fn=_lp_solver,
+    aliases=("lp",),
+    default_max_iters=100_000,
+    paper_ref="§I/§V (traversal-family baseline)",
+))
+
+UNION_FIND = register_solver(SolverSpec(
+    name="union_find",
+    fn=_union_find_solver,
+    aliases=("connectit", "rem"),
+    default_max_iters=1,
+    supports_batch=False,        # host-side sequential loop
+    runs_on="host",
+    paper_ref="§III-C (ConnectIt stand-in: Rem's union-find)",
+))

@@ -1,0 +1,49 @@
+"""ConnectIt stand-in: Rem's union-find with splicing (paper §III-C).
+
+Host-side by design: Rem's algorithm is sequential pointer-chasing with no
+efficient TPU analogue (the paper itself positions it as the winner only
+in parallelism-starved regimes — DESIGN.md §8.5).  Registered in the
+``repro.connectivity`` solver registry so all three families run through
+one ``solve()`` signature.
+
+Warm start seeds the parent array with a previous solve's labels: Rem's
+loop only ever rewrites parents to smaller values, so a star forest at the
+old component minima is a valid (and already-compressed) starting forest.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.oracle import rem_union_find
+from repro.graphs.structs import Graph
+
+
+def rem_labels(
+    src, dst, n_vertices: int,
+    init_labels: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Run host-side Rem union-find; returns (labels, n_iterations,
+    converged).
+
+    ``n_iterations`` is 1 by the paper's §IV-C convention (a union-find
+    pass has no iteration structure to count); ``converged`` is always
+    True — the pass is exact by construction.
+    """
+    parent0 = None if init_labels is None else np.asarray(init_labels)
+    dtype = getattr(src, "dtype", jnp.int32)
+    labels = rem_union_find(np.asarray(src), np.asarray(dst), n_vertices,
+                            parent0=parent0)
+    return (jnp.asarray(labels, dtype=dtype), jnp.int32(1),
+            jnp.array(True))
+
+
+def rem(graph: Graph, init_labels=None):
+    return rem_labels(graph.src, graph.dst, graph.n_vertices,
+                      init_labels=init_labels)
+
+
+__all__ = ["rem_union_find", "rem_labels", "rem"]

@@ -1,4 +1,10 @@
-"""Core: the paper's Contour connectivity algorithm + baselines."""
+"""Core: deprecation shims over ``repro.connectivity``.
+
+The algorithms moved to the unified ``repro.connectivity`` package
+(``solve()`` facade, typed options/results, solver registry, warm starts,
+batching).  Everything here stays importable and call-compatible but
+emits one ``DeprecationWarning`` per entry point on first use.
+"""
 from repro.core.contour import (
     VARIANTS,
     connected_components,

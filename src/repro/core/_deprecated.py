@@ -1,0 +1,29 @@
+"""Warn-once helper for the ``repro.core`` deprecation shims.
+
+Each old entry point fires exactly one ``DeprecationWarning`` per process
+(the first call), so migrating callers see the pointer to the new API
+without log spam from hot loops.  ``reset()`` clears the memo — used by
+the deprecation tests to assert the warning deterministically.
+"""
+from __future__ import annotations
+
+import warnings
+
+_seen: set = set()
+
+
+def warn_once(old: str, replacement: str) -> None:
+    if old in _seen:
+        return
+    _seen.add(old)
+    warnings.warn(
+        f"{old} is deprecated; use {replacement} "
+        "(see repro.connectivity).",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset() -> None:
+    """Forget which warnings fired (test hook)."""
+    _seen.clear()

@@ -1,177 +1,43 @@
-"""The Contour connectivity algorithm (paper Alg. 1) and its six variants.
+"""Deprecation shims for the old Contour entry points.
 
-Variants (paper §III-B4):
-
-* ``C-Syn``  — Alg. 1 verbatim: synchronous 2-order sweeps, double
-  buffered, plain no-change convergence test.
-* ``C-1``    — 1-order operator + async recompaction + early check.
-* ``C-2``    — 2-order operator + async recompaction + early check
-  (the paper's default).
-* ``C-m``    — high-order operator: realised as a 2-order edge sweep
-  followed by ``log2(m)`` pointer-jump rounds (same fixed point as the
-  literal L^m chain; DESIGN.md §3).
-* ``C-11mm`` — ``warmup`` iterations of C-1 then C-m until convergence.
-* ``C-1m1m`` — alternate C-1 and C-m per iteration.
-
-Every variant is a pure function of the edge list, runs under ``jax.jit``
-with a ``lax.while_loop``, and returns ``(labels, n_iterations)``.
-
-The MM sweep itself is routed through the ``kernels.contour_mm`` dispatch
-layer: ``backend="xla"`` (default) is the scatter-min realisation,
-``backend="pallas_blocked"`` the label-blocked vectorized TPU kernel and
-``backend="auto"`` picks per platform/graph size
-(`ops.plan_contour_kernel`) — so every variant can run on every backend.
+The implementation moved to ``repro.connectivity.contour``; the public
+surface is now ``repro.connectivity.solve`` (one facade over every solver
+family, typed options, warm starts, batching).  These wrappers stay
+call-compatible and emit one ``DeprecationWarning`` per entry point.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from repro.connectivity.contour import VARIANTS
+from repro.connectivity.contour import connected_components as _connected_components
+from repro.connectivity.contour import contour as _contour
+from repro.connectivity.contour import contour_labels as _contour_labels
+from repro.core._deprecated import warn_once
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import labels as lab
-from repro.graphs.structs import Graph
-from repro.kernels.contour_mm import ops as mm_ops
-
-VARIANTS = ("C-Syn", "C-1", "C-2", "C-m", "C-11mm", "C-1m1m")
-
-# C-m's effective order: the paper uses m = 1024; log2(1024) = 10 jump
-# rounds after the 2-order edge sweep covers the same mapping depth.
-_CM_JUMP_ROUNDS = 10
+__all__ = ["VARIANTS", "connected_components", "contour", "contour_labels"]
 
 
-class ContourState(NamedTuple):
-    L: jax.Array
-    it: jax.Array          # int32 iteration counter
-    done: jax.Array        # bool
+def contour_labels(src, dst, n_vertices, **kw):
+    """Deprecated: use ``repro.connectivity.solve`` (algorithm='contour').
 
-
-def _sweep_sync(L, src, dst, order, backend):
-    """Alg. 1 body: one synchronous MM^order sweep."""
-    return mm_ops.mm_relax_backend(L, src, dst, order=order, backend=backend)
-
-
-def _sweep_async(L, src, dst, order, jump_rounds, compress, backend):
-    """Optimised sweep: MM^order + pointer-jump recompaction.
-
-    ``jump_rounds`` realises high-order variants; ``compress`` is the
-    async-update adaptation (spreads freshly lowered labels inside the
-    same iteration, mirroring the paper's in-place updates).
+    Keeps the seed signature (all options were keyword-only after
+    ``n_vertices``); returns ``(labels, n_iterations)``.
     """
-    L = mm_ops.mm_relax_backend(L, src, dst, order=order, backend=backend)
-    L = lab.pointer_jump(L, rounds=jump_rounds + compress)
-    return L
+    warn_once("repro.core.contour.contour_labels",
+              "repro.connectivity.solve(graph, algorithm='contour')")
+    labels, iters, _ = _contour_labels(src, dst, n_vertices, **kw)
+    return labels, iters
 
 
-def _make_step(variant: str, warmup: int, async_compress: int,
-               backend: str = "xla"):
-    """Return step(L, it, src, dst) -> L_new for the chosen variant."""
-    if variant == "C-Syn":
-        def step(L, it, src, dst):
-            del it
-            return _sweep_sync(L, src, dst, 2, backend)
-    elif variant == "C-1":
-        def step(L, it, src, dst):
-            del it
-            return _sweep_async(L, src, dst, 1, 0, async_compress, backend)
-    elif variant == "C-2":
-        def step(L, it, src, dst):
-            del it
-            return _sweep_async(L, src, dst, 2, 0, async_compress, backend)
-    elif variant == "C-m":
-        def step(L, it, src, dst):
-            del it
-            return _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
-                                async_compress, backend)
-    elif variant == "C-11mm":
-        def step(L, it, src, dst):
-            return jax.lax.cond(
-                it < warmup,
-                lambda L: _sweep_async(L, src, dst, 1, 0,
-                                       async_compress, backend),
-                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
-                                       async_compress, backend),
-                L,
-            )
-    elif variant == "C-1m1m":
-        def step(L, it, src, dst):
-            return jax.lax.cond(
-                it % 2 == 0,
-                lambda L: _sweep_async(L, src, dst, 1, 0,
-                                       async_compress, backend),
-                lambda L: _sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
-                                       async_compress, backend),
-                L,
-            )
-    elif variant.startswith("C-") and variant[2:].isdigit():
-        # literal h-order minimum-mapping operator (Definition 3): the
-        # length-h gather chain per edge, exactly as written in the paper.
-        # The named C-m variant realises high orders via pointer jumping
-        # instead (same fixed point, TPU-vectorisable — DESIGN.md §3);
-        # this literal form exists to validate that equivalence.
-        order = int(variant[2:])
-
-        def step(L, it, src, dst):
-            del it
-            return _sweep_async(L, src, dst, order, 0, async_compress,
-                                backend)
-    else:
-        raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS} "
-                         "or literal 'C-<h>'")
-    return step
+def contour(graph, **kw):
+    """Deprecated: use ``repro.connectivity.solve``."""
+    warn_once("repro.core.contour.contour",
+              "repro.connectivity.solve(graph)")
+    labels, iters, _ = _contour(graph, **kw)
+    return labels, iters
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_vertices", "variant", "max_iters", "warmup",
-                     "async_compress", "backend"),
-)
-def contour_labels(
-    src: jax.Array,
-    dst: jax.Array,
-    n_vertices: int,
-    *,
-    variant: str = "C-2",
-    max_iters: int = 100_000,
-    warmup: int = 2,
-    async_compress: int = 1,
-    backend: str = "xla",
-):
-    """Run the Contour algorithm; returns (labels[n], n_iterations).
-
-    Labels converge to the minimum vertex id of each component.
-    """
-    step = _make_step(variant, warmup, async_compress, backend)
-    sync = variant == "C-Syn"
-    L0 = jnp.arange(n_vertices, dtype=src.dtype)
-
-    def cond(s: ContourState):
-        return (~s.done) & (s.it < max_iters)
-
-    def body(s: ContourState):
-        L_new = step(s.L, s.it, src, dst)
-        if sync:
-            done = jnp.all(L_new == s.L)  # Alg. 1 line 10: no label change
-        else:
-            done = lab.converged_early(L_new, src, dst)  # paper §III-B2
-        return ContourState(L=L_new, it=s.it + 1, done=done)
-
-    init = ContourState(L=L0, it=jnp.int32(0), done=jnp.array(False))
-    out = jax.lax.while_loop(cond, body, init)
-    # Final compression: at the early-convergence point the pointer graph
-    # restricted to edge endpoints is a star forest; interior tree vertices
-    # of padded/isolated chains may still be one hop away.
-    L = lab.pointer_jump(out.L, rounds=1)
-    return L, out.it
-
-
-def contour(graph: Graph, **kw):
-    """Convenience wrapper over :func:`contour_labels`."""
-    return contour_labels(graph.src, graph.dst, graph.n_vertices, **kw)
-
-
-def connected_components(graph: Graph, variant: str = "C-2") -> jax.Array:
-    """Public API: min-vertex-id component labels."""
-    L, _ = contour(graph, variant=variant)
-    return L
+def connected_components(graph, variant: str = "C-2"):
+    """Deprecated: use ``repro.connectivity.solve(graph).labels``."""
+    warn_once("repro.core.contour.connected_components",
+              "repro.connectivity.solve(graph).labels")
+    return _connected_components(graph, variant=variant)

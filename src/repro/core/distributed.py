@@ -1,180 +1,35 @@
-"""Distributed (multi-pod) Contour connectivity via ``shard_map``.
+"""Deprecation shims for the old distributed-Contour entry points.
 
-Mapping of the paper's Arkouda/Chapel distribution onto a TPU mesh
-(DESIGN.md §3/§4):
-
-* the edge list is block-sharded across the data-parallel mesh axes
-  (``pod`` × ``data``); padding uses self-loop edges which are no-ops for
-  every min-mapping operator;
-* the label array ``L`` is replicated per device (n × 4 B — even a
-  2³⁰-vertex graph is a 4 GB replica, fine for 16 GB HBM chips; an
-  all-to-all label-sharded variant is the documented scale-out path);
-* each global round: every device relaxes its local edge shard (through
-  the ``kernels.contour_mm`` backend dispatch — XLA scatter-min on CPU
-  hosts, the label-blocked Pallas kernel on TPU) and compresses, then one
-  ``lax.pmin`` all-reduce merges label arrays — the collective is the
-  *only* cross-device traffic;
-* convergence: the paper's early-convergence predicate evaluated on local
-  edges, AND-reduced across devices.
-
-Beyond-paper optimisation (§Perf, hillclimb #3): ``local_rounds > 1`` runs
-k relax+compress rounds on the local shard between all-reduces.  Labels
-decrease monotonically toward the same fixed point regardless of staleness,
-so correctness is unaffected, while collective bytes per convergence drop
-by ~k× on diameter-bound graphs.
+The implementation moved to ``repro.connectivity.distributed``; the
+public surface is ``repro.connectivity.solve(graph,
+SolveOptions(mesh=mesh))`` — a mesh in the options routes the solve
+through the ``shard_map`` path automatically.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Sequence
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro import jax_compat
-from repro.core import labels as lab
-from repro.graphs.structs import Graph
-from repro.kernels.contour_mm import ops as mm_ops
-
-
-class _State(NamedTuple):
-    L: jax.Array
-    it: jax.Array
-    done: jax.Array
-
-
-def _round_up(x: int, k: int) -> int:
-    return (x + k - 1) // k * k
-
-
-def distributed_contour(
-    graph: Graph,
-    mesh: jax.sharding.Mesh,
-    *,
-    edge_axes: Sequence[str] = ("data",),
-    local_rounds: int = 1,
-    max_iters: int = 10_000,
-    async_compress: int = 1,
-    backend: str = "xla",
-):
-    """Run Contour C-2 with edges sharded over ``edge_axes`` of ``mesh``.
-
-    Returns ``(labels, n_global_rounds)``.  Works on any mesh whose
-    ``edge_axes`` product divides the (padded) edge count — the production
-    meshes in ``repro.launch.mesh`` and the multi-device CPU test mesh
-    alike.  ``backend`` selects the per-shard sweep realisation through
-    the shared ``kernels.contour_mm`` dispatch layer ("xla" scatter-min by
-    default; "pallas_blocked"/"auto" for the label-blocked TPU kernel).
-    """
-    n_shards = 1
-    for a in edge_axes:
-        n_shards *= mesh.shape[a]
-    g = graph.pad_edges(_round_up(max(graph.n_edges, n_shards), n_shards))
-    n = g.n_vertices
-    axis = tuple(edge_axes)
-
-    edge_spec = P(axis if len(axis) > 1 else axis[0])
-    lbl_spec = P()  # replicated
-
-    def body(src_loc, dst_loc):
-        L0 = jnp.arange(n, dtype=src_loc.dtype)
-
-        def cond(s: _State):
-            return (~s.done) & (s.it < max_iters)
-
-        def step(s: _State):
-            L = s.L
-            for _ in range(local_rounds):
-                L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
-                                            backend=backend)
-                L = lab.pointer_jump(L, rounds=async_compress)
-            # the one collective of the round: elementwise min across shards
-            L = jax.lax.pmin(L, axis)
-            ok_local = lab.converged_early(L, src_loc, dst_loc)
-            ok = jnp.bool_(jax.lax.pmin(ok_local.astype(jnp.int32), axis))
-            return _State(L=L, it=s.it + 1, done=ok)
-
-        out = jax.lax.while_loop(
-            cond, step, _State(L=L0, it=jnp.int32(0), done=jnp.array(False))
-        )
-        return out.L, out.it
-
-    mapped = jax_compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(edge_spec, edge_spec),
-        out_specs=(lbl_spec, lbl_spec),
-    )
-
-    src = jax.device_put(g.src, NamedSharding(mesh, edge_spec))
-    dst = jax.device_put(g.dst, NamedSharding(mesh, edge_spec))
-    L, it = jax.jit(mapped)(src, dst)
-    return L, it
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_vertices", "mesh", "edge_axes", "local_rounds",
-                     "max_iters", "check_every", "backend"),
+from repro.connectivity.distributed import distributed_contour as _distributed_contour
+from repro.connectivity.distributed import (
+    distributed_contour_step_fn as _distributed_contour_step_fn,
 )
-def distributed_contour_step_fn(
-    src,
-    dst,
-    n_vertices: int,
-    mesh: jax.sharding.Mesh,
-    edge_axes: tuple = ("data",),
-    local_rounds: int = 1,
-    max_iters: int = 10_000,
-    check_every: int = 1,
-    backend: str = "xla",
-):
-    """jit-compilable entry used by the dry-run/roofline harness.
+from repro.core._deprecated import warn_once
 
-    Identical math to :func:`distributed_contour`, but takes pre-sharded
-    arrays so it can be ``.lower().compile()``-ed against
-    ``ShapeDtypeStruct`` inputs on the production mesh.
+__all__ = ["distributed_contour", "distributed_contour_step_fn"]
 
-    ``check_every`` is the beyond-paper convergence-check cadence: the
-    paper's early check (§III-B2) gathers L at every edge endpoint each
-    iteration (an O(m) gather + a scalar all-reduce); checking every k-th
-    round removes that traffic from the other k-1 rounds at the cost of
-    up to k-1 extra (cheap) relaxation rounds after the fixed point.
+
+def distributed_contour(graph, mesh, **kw):
+    """Deprecated: use ``solve(graph, SolveOptions(mesh=mesh))``.
+
+    Returns ``(labels, n_global_rounds)`` as the seed did.
     """
-    axis = tuple(edge_axes)
-    edge_spec = P(axis if len(axis) > 1 else axis[0])
+    warn_once("repro.core.distributed.distributed_contour",
+              "repro.connectivity.solve(graph, SolveOptions(mesh=mesh))")
+    labels, rounds, _ = _distributed_contour(graph, mesh, **kw)
+    return labels, rounds
 
-    def body(src_loc, dst_loc):
-        L0 = jnp.arange(n_vertices, dtype=src_loc.dtype)
 
-        def cond(s: _State):
-            return (~s.done) & (s.it < max_iters)
-
-        def step(s: _State):
-            L = s.L
-            for _ in range(local_rounds):
-                L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
-                                            backend=backend)
-                L = lab.pointer_jump(L, rounds=1)
-            L = jax.lax.pmin(L, axis)
-            if check_every <= 1:
-                ok_local = lab.converged_early(L, src_loc, dst_loc)
-                ok = jnp.bool_(jax.lax.pmin(ok_local.astype(jnp.int32), axis))
-            else:
-                def do_check(_):
-                    ok_local = lab.converged_early(L, src_loc, dst_loc)
-                    return jnp.bool_(
-                        jax.lax.pmin(ok_local.astype(jnp.int32), axis))
-                ok = jax.lax.cond(
-                    (s.it + 1) % check_every == 0, do_check,
-                    lambda _: jnp.array(False), operand=None)
-            return _State(L=L, it=s.it + 1, done=ok)
-
-        out = jax.lax.while_loop(
-            cond, step, _State(L=L0, it=jnp.int32(0), done=jnp.array(False))
-        )
-        return out.L, out.it
-
-    return jax_compat.shard_map(
-        body, mesh=mesh, in_specs=(edge_spec, edge_spec), out_specs=(P(), P())
-    )(src, dst)
+def distributed_contour_step_fn(src, dst, n_vertices, mesh, **kw):
+    """Deprecated: use ``repro.connectivity.distributed``."""
+    warn_once(
+        "repro.core.distributed.distributed_contour_step_fn",
+        "repro.connectivity.distributed.distributed_contour_step_fn")
+    return _distributed_contour_step_fn(src, dst, n_vertices, mesh, **kw)

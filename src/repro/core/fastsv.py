@@ -1,63 +1,33 @@
-"""FastSV baseline (Zhang, Azad & Hu, SIAM PP 2020) — paper §III-C.
+"""Deprecation shims for the old FastSV entry points.
 
-FastSV iterates three scatter-min phases over a parent array ``f`` with a
-grandparent shortcut ``gf = f[f]``:
-
-  1. *stochastic hooking*:  f_next[f[u]] <- min(f_next[f[u]], gf[v])
-  2. *aggressive hooking*:  f_next[u]    <- min(f_next[u],    gf[v])
-  3. *shortcutting*:        f_next[u]    <- min(f_next[u],    gf[u])
-
-(applied over both edge directions), converging when the grandparent array
-stops changing.  This is the paper's principal large-scale-parallel
-comparison target; we implement it with the same scatter-min primitive as
-Contour so runtime comparisons isolate the algorithmic difference.
+The implementation moved to ``repro.connectivity.fastsv``; the public
+surface is ``repro.connectivity.solve(graph, algorithm="fastsv")``.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from repro.connectivity.fastsv import fastsv as _fastsv
+from repro.connectivity.fastsv import fastsv_labels as _fastsv_labels
+from repro.core._deprecated import warn_once
 
-import jax
-import jax.numpy as jnp
-
-from repro.graphs.structs import Graph
+__all__ = ["fastsv", "fastsv_labels"]
 
 
-class _State(NamedTuple):
-    f: jax.Array
-    gf: jax.Array
-    it: jax.Array
-    done: jax.Array
+def fastsv_labels(src, dst, n_vertices, max_iters: int = 256):
+    """Deprecated: use ``repro.connectivity.solve`` (algorithm='fastsv').
+
+    Keeps the seed signature exactly (``max_iters`` stays reachable
+    positionally); returns ``(labels, n_iterations)``.
+    """
+    warn_once("repro.core.fastsv.fastsv_labels",
+              "repro.connectivity.solve(graph, algorithm='fastsv')")
+    labels, iters, _ = _fastsv_labels(src, dst, n_vertices,
+                                      max_iters=max_iters)
+    return labels, iters
 
 
-@functools.partial(jax.jit, static_argnames=("n_vertices", "max_iters"))
-def fastsv_labels(src, dst, n_vertices: int, max_iters: int = 256):
-    """Run FastSV; returns (labels[n], n_iterations)."""
-    u = jnp.concatenate([src, dst])
-    v = jnp.concatenate([dst, src])
-    f0 = jnp.arange(n_vertices, dtype=src.dtype)
-
-    def cond(s: _State):
-        return (~s.done) & (s.it < max_iters)
-
-    def body(s: _State):
-        f, gf = s.f, s.gf
-        fn = f
-        # (1) stochastic hooking: hook the root/parent of u under gf[v]
-        fn = fn.at[f[u]].min(gf[v])
-        # (2) aggressive hooking: hook u itself under gf[v]
-        fn = fn.at[u].min(gf[v])
-        # (3) shortcutting
-        fn = jnp.minimum(fn, gf)
-        gf_new = fn[fn]
-        done = jnp.all(gf_new == gf)
-        return _State(f=fn, gf=gf_new, it=s.it + 1, done=done)
-
-    init = _State(f=f0, gf=f0, it=jnp.int32(0), done=jnp.array(False))
-    out = jax.lax.while_loop(cond, body, init)
-    # converged gf is a star forest rooted at component minima
-    return out.gf, out.it
-
-
-def fastsv(graph: Graph, max_iters: int = 256):
-    return fastsv_labels(graph.src, graph.dst, graph.n_vertices, max_iters)
+def fastsv(graph, max_iters: int = 256):
+    """Deprecated: use ``repro.connectivity.solve`` (algorithm='fastsv')."""
+    warn_once("repro.core.fastsv.fastsv",
+              "repro.connectivity.solve(graph, algorithm='fastsv')")
+    labels, iters, _ = _fastsv(graph, max_iters=max_iters)
+    return labels, iters

@@ -1,47 +1,35 @@
-"""Label-propagation baseline (paper §I, §V).
+"""Deprecation shims for the old label-propagation entry points.
 
-Classic min-label propagation: every vertex repeatedly takes the minimum
-label among itself and its neighbours.  The paper observes this is the
-special case of Contour with a one-order synchronous operator; we keep a
-separate implementation (edge-scatter formulation) as the traversal-family
-baseline.  Converges in O(d_max) iterations — the method Contour's
-log-convergence is measured against.
+The implementation moved to ``repro.connectivity.lp``; the public surface
+is ``repro.connectivity.solve(graph, algorithm="label_propagation")``.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from repro.connectivity.lp import label_propagation as _label_propagation
+from repro.connectivity.lp import label_propagation_labels as _label_propagation_labels
+from repro.core._deprecated import warn_once
 
-import jax
-import jax.numpy as jnp
-
-from repro.graphs.structs import Graph
+__all__ = ["label_propagation", "label_propagation_labels"]
 
 
-class _State(NamedTuple):
-    L: jax.Array
-    it: jax.Array
-    done: jax.Array
+def label_propagation_labels(src, dst, n_vertices, max_iters: int = 100_000):
+    """Deprecated: use ``solve(graph, algorithm='label_propagation')``.
+
+    Keeps the seed signature exactly (``max_iters`` stays reachable
+    positionally); returns ``(labels, n_iterations)``.
+    """
+    warn_once("repro.core.lp.label_propagation_labels",
+              "repro.connectivity.solve(graph, "
+              "algorithm='label_propagation')")
+    labels, iters, _ = _label_propagation_labels(src, dst, n_vertices,
+                                                 max_iters=max_iters)
+    return labels, iters
 
 
-@functools.partial(jax.jit, static_argnames=("n_vertices", "max_iters"))
-def label_propagation_labels(src, dst, n_vertices: int, max_iters: int = 100_000):
-    def cond(s):
-        return (~s.done) & (s.it < max_iters)
-
-    def body(s):
-        L = s.L
-        Lu = L.at[src].min(L[dst])
-        Lu = Lu.at[dst].min(L[src])
-        done = jnp.all(Lu == L)
-        return _State(L=Lu, it=s.it + 1, done=done)
-
-    init = _State(
-        L=jnp.arange(n_vertices, dtype=src.dtype), it=jnp.int32(0), done=jnp.array(False)
-    )
-    out = jax.lax.while_loop(cond, body, init)
-    return out.L, out.it
-
-
-def label_propagation(graph: Graph, max_iters: int = 100_000):
-    return label_propagation_labels(graph.src, graph.dst, graph.n_vertices, max_iters)
+def label_propagation(graph, max_iters: int = 100_000):
+    """Deprecated: use ``solve(graph, algorithm='label_propagation')``."""
+    warn_once("repro.core.lp.label_propagation",
+              "repro.connectivity.solve(graph, "
+              "algorithm='label_propagation')")
+    labels, iters, _ = _label_propagation(graph, max_iters=max_iters)
+    return labels, iters

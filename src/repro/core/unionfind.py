@@ -1,10 +1,20 @@
-"""ConnectIt stand-in: Rem's union-find with splicing (paper §III-C).
+"""Deprecation shim for the ConnectIt stand-in entry point.
 
-Host-side by design: Rem's algorithm is sequential pointer-chasing with no
-efficient TPU analogue (the paper itself positions it as the winner only
-in parallelism-starved regimes — DESIGN.md §8.5).  Exposed from
-``repro.core`` so benchmarks compare all three families through one API.
+The registered solver lives in ``repro.connectivity.unionfind``; the
+public surface is ``repro.connectivity.solve(graph,
+algorithm="union_find")``.  The raw oracle stays importable from
+``repro.graphs.oracle`` (it doubles as test ground truth).
 """
-from repro.graphs.oracle import rem_union_find
+from __future__ import annotations
+
+from repro.graphs.oracle import rem_union_find as _rem_union_find
+from repro.core._deprecated import warn_once
 
 __all__ = ["rem_union_find"]
+
+
+def rem_union_find(src, dst, n_vertices, *args, **kw):
+    """Deprecated: use ``solve(graph, algorithm='union_find')``."""
+    warn_once("repro.core.unionfind.rem_union_find",
+              "repro.connectivity.solve(graph, algorithm='union_find')")
+    return _rem_union_find(src, dst, n_vertices, *args, **kw)

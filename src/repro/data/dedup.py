@@ -18,7 +18,7 @@ from typing import List, Sequence
 
 import numpy as np
 
-from repro.core.contour import contour_labels
+from repro.connectivity import SolveOptions, solve
 from repro.graphs.structs import Graph, canonicalize_edges
 
 _MERSENNE = (1 << 61) - 1
@@ -100,13 +100,13 @@ def minhash_dedup(
         labels = np.arange(n)
         return DedupReport(labels, np.ones(n, bool), n, 0, 0)
     g = Graph.from_numpy(src, dst, n)
-    L, iters = contour_labels(g.src, g.dst, g.n_vertices, variant=variant)
-    labels = np.asarray(L)
+    result = solve(g, SolveOptions(algorithm="contour", variant=variant))
+    labels = np.asarray(result.labels)
     keep = labels == np.arange(n)
     return DedupReport(
         labels=labels,
         keep=keep,
         n_clusters=int(keep.sum()),
         n_candidate_pairs=int(src.shape[0]),
-        cc_iterations=int(iters),
+        cc_iterations=int(result.iterations),
     )

@@ -50,16 +50,28 @@ def connected_components_oracle(src, dst, n_vertices: int) -> np.ndarray:
     return parent
 
 
-def rem_union_find(src, dst, n_vertices: int) -> np.ndarray:
+def rem_union_find(src, dst, n_vertices: int, parent0=None) -> np.ndarray:
     """Rem's union-find with splicing (ConnectIt's winner), sequential.
 
     Returns min-vertex-id labels per component.  The union loop follows
     Patwary et al.'s presentation: walk both vertices' parent chains,
     splicing the larger root under the smaller as we go.
+
+    ``parent0`` warm-starts the parent forest from a previous solve's
+    labels (may be shorter than ``n_vertices`` if the graph grew; clamped
+    to the ``p[v] <= v`` invariant every union here preserves).
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     p = np.arange(n_vertices, dtype=np.int64)
+    if parent0 is not None:
+        parent0 = np.asarray(parent0, dtype=np.int64)
+        if parent0.shape[0] > n_vertices:
+            raise ValueError(
+                f"parent0 covers {parent0.shape[0]} vertices but the graph "
+                f"has only {n_vertices}")
+        k = parent0.shape[0]
+        p[:k] = np.minimum(parent0, p[:k])
     for u, v in zip(src.tolist(), dst.tolist()):
         r_u, r_v = u, v
         while p[r_u] != p[r_v]:

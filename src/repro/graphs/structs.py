@@ -64,6 +64,37 @@ class Graph:
     def to_numpy(self) -> Tuple[np.ndarray, np.ndarray, int]:
         return np.asarray(self.src), np.asarray(self.dst), self.n_vertices
 
+    def add_edges(self, src, dst, n_vertices: int = None) -> "Graph":
+        """Return a graph with the given edges appended (incremental use).
+
+        ``n_vertices`` may grow the vertex set at the same time; combined
+        with ``repro.connectivity.solve(..., warm_start=prev_result)``
+        this is the batch-incremental update path — labels from the
+        previous solve stay a valid (monotonically decreasing) start.
+        """
+        n = self.n_vertices if n_vertices is None else int(n_vertices)
+        if n < self.n_vertices:
+            raise ValueError(
+                f"n_vertices={n} shrinks the graph (was {self.n_vertices})")
+        src = jnp.asarray(src, dtype=jnp.int32)
+        dst = jnp.asarray(dst, dtype=jnp.int32)
+        if src.shape != dst.shape:
+            raise ValueError(f"src/dst shape mismatch: {src.shape} vs "
+                             f"{dst.shape}")
+        # eager bounds check: out-of-range ids would otherwise be silently
+        # clamped by XLA gather/scatter and merge the wrong components
+        if src.size and int(jnp.maximum(src.max(), dst.max())) >= n:
+            raise ValueError(
+                f"edge endpoint {int(jnp.maximum(src.max(), dst.max()))} "
+                f">= n_vertices={n}; pass n_vertices= to grow the graph")
+        if src.size and int(jnp.minimum(src.min(), dst.min())) < 0:
+            raise ValueError("edge endpoints must be >= 0")
+        return Graph(
+            src=jnp.concatenate([self.src, src]),
+            dst=jnp.concatenate([self.dst, dst]),
+            n_vertices=n,
+        )
+
     def pad_edges(self, target_m: int, fill_vertex: int = 0) -> "Graph":
         """Pad the edge list to ``target_m`` with self-loop edges.
 

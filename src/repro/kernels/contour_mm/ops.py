@@ -4,7 +4,7 @@ Three device backends realise the same MM^h sweep (DESIGN.md §3):
 
 * ``"xla"``           — synchronous scatter-min (`lab.mm_relax`); the only
   backend that *compiles* on a CPU host (Pallas TPU kernels cannot), and
-  what `repro.core.distributed` defaults to.
+  what `repro.connectivity.distributed` defaults to.
 * ``"pallas"``        — the seed fused in-VMEM asynchronous kernel
   (`kernel.mm2_pallas`): whole ``L`` VMEM-resident (ceiling n ≈ 3M),
   scalar sequential inner loop, 2-order only.  Kept as the
@@ -35,7 +35,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import labels as lab
+from repro.connectivity import minmap as lab
 from repro.graphs.structs import Graph
 from repro.kernels.contour_mm.blocked import (_round_up,
                                               binned_scatter_min_pallas)
@@ -227,7 +227,9 @@ def contour_cc_fixpoint(
     early-convergence predicate (§III-B2) is evaluated on device and feeds
     the loop condition directly — no per-iteration device→host readback.
     (The jit around this function is itself the proof: a host-side
-    ``bool(converged)`` would fail to trace.)  Returns (labels, n_iters).
+    ``bool(converged)`` would fail to trace.)  Returns
+    (labels, n_iters, converged) — the loop's own flag, False iff the
+    ``max_iters`` budget ran out.
     """
     def cond(s: _FixState):
         return (~s.done) & (s.it < max_iters)
@@ -246,5 +248,5 @@ def contour_cc_fixpoint(
     out = jax.lax.while_loop(
         cond, body, _FixState(L=L0, it=jnp.int32(0), done=jnp.array(False)))
     # Interior vertices of padded/isolated chains may be one hop from the
-    # star root (same as core.contour.contour_labels' final compression).
-    return lab.pointer_jump(out.L, rounds=1), out.it
+    # star root (same as connectivity.contour's final compression).
+    return lab.pointer_jump(out.L, rounds=1), out.it, out.done

@@ -181,7 +181,7 @@ def lower_decode(arch: ArchSpec, shape, mesh) -> Any:
 
 def lower_contour(mesh, mesh_name: str) -> Any:
     """The paper's workload: one distributed Contour solve, edge-sharded."""
-    from repro.core.distributed import distributed_contour_step_fn
+    from repro.connectivity.distributed import distributed_contour_step_fn
 
     edge_axes = ("pod", "data") if "pod2" in mesh_name else ("data",)
     m = CONTOUR_N_EDGES

@@ -1,0 +1,97 @@
+"""The old ``repro.core`` entry points: still correct, now warning shims."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import solve
+from repro.core import _deprecated
+from repro.graphs import generators as gen
+
+
+@pytest.fixture()
+def graph():
+    return gen.components_mix([gen.path(300, seed=1), gen.rmat(9, seed=2)],
+                              seed=3)
+
+
+def _deprecation_messages(records):
+    return [str(r.message) for r in records
+            if issubclass(r.category, DeprecationWarning)]
+
+
+def test_connected_components_shim_warns_and_matches(graph):
+    from repro.core.contour import connected_components
+    _deprecated.reset()
+    with pytest.warns(DeprecationWarning, match="connected_components"):
+        labels = connected_components(graph)
+    assert (np.asarray(labels) == np.asarray(solve(graph).labels)).all()
+
+
+def test_contour_labels_shim_warns_and_matches(graph):
+    from repro.core.contour import contour_labels
+    _deprecated.reset()
+    with pytest.warns(DeprecationWarning, match="contour_labels"):
+        labels, iters = contour_labels(graph.src, graph.dst,
+                                       graph.n_vertices, variant="C-2")
+    result = solve(graph)
+    assert (np.asarray(labels) == np.asarray(result.labels)).all()
+    assert int(iters) == int(result.iterations)
+
+
+def test_fastsv_labels_shim_warns_and_matches(graph):
+    from repro.core.fastsv import fastsv_labels
+    _deprecated.reset()
+    with pytest.warns(DeprecationWarning, match="fastsv_labels"):
+        labels, _ = fastsv_labels(graph.src, graph.dst, graph.n_vertices)
+    assert (np.asarray(labels)
+            == np.asarray(solve(graph, algorithm="fastsv").labels)).all()
+
+
+def test_shims_warn_exactly_once_per_entry_point(graph):
+    from repro.core.contour import connected_components
+    _deprecated.reset()
+    with warnings.catch_warnings(record=True) as records:
+        warnings.simplefilter("always")
+        connected_components(graph)
+        connected_components(graph)
+        connected_components(graph)
+    assert len(_deprecation_messages(records)) == 1
+
+
+def test_shims_accept_seed_positional_max_iters(graph):
+    """The seed signatures took max_iters as the 4th positional arg."""
+    from repro.core.fastsv import fastsv_labels
+    from repro.core.lp import label_propagation_labels
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        L, it = fastsv_labels(graph.src, graph.dst, graph.n_vertices, 100)
+        assert int(it) <= 100
+        L2, it2 = label_propagation_labels(graph.src, graph.dst,
+                                           graph.n_vertices, 10_000)
+        assert int(it2) <= 10_000
+        assert (np.asarray(L) == np.asarray(L2)).all()
+
+
+def test_every_old_entry_point_still_runs(graph):
+    """The full legacy surface stays importable and call-compatible."""
+    from repro.core import (contour, fastsv, label_propagation)
+    from repro.core.distributed import distributed_contour
+    from repro.core.unionfind import rem_union_find
+    import jax
+    from repro import jax_compat
+
+    oracle = np.asarray(solve(graph).labels)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        L, _ = contour(graph)
+        assert (np.asarray(L) == oracle).all()
+        L, _ = fastsv(graph)
+        assert (np.asarray(L) == oracle).all()
+        L, _ = label_propagation(graph)
+        assert (np.asarray(L) == oracle).all()
+        L = rem_union_find(*graph.to_numpy())
+        assert (np.asarray(L) == oracle).all()
+        mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+        L, _ = distributed_contour(graph, mesh)
+        assert (np.asarray(L) == oracle).all()

@@ -1,0 +1,238 @@
+"""The unified ``repro.connectivity`` API: solve() facade, typed options,
+solver registry, ComponentResult utilities, batched solving."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import (
+    ComponentResult,
+    Graph,
+    SolveOptions,
+    list_solvers,
+    solve,
+    solve_batch,
+)
+from repro.connectivity import (
+    VARIANTS,
+    get_solver,
+    register_solver,
+    stack_graphs,
+)
+from repro.connectivity.registry import SolverSpec
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle
+
+GRAPHS = {
+    "path": lambda: gen.path(1_500, seed=1),
+    "rmat": lambda: gen.rmat(11, seed=2),
+    "multi_component": lambda: gen.components_mix(
+        [gen.path(400, seed=3), gen.star(200, seed=4), gen.rmat(9, seed=5)],
+        seed=6),
+}
+
+# every registered family that runs without a mesh
+SINGLE_DEVICE_ALGOS = ("contour", "fastsv", "label_propagation", "union_find")
+
+
+# ---------------------------------------------------------------- facade
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algorithm", SINGLE_DEVICE_ALGOS)
+def test_solve_every_family_matches_oracle(gname, algorithm):
+    g = GRAPHS[gname]()
+    oracle = connected_components_oracle(*g.to_numpy())
+    result = solve(g, SolveOptions(algorithm=algorithm))
+    assert (np.asarray(result.labels) == oracle).all()
+    assert bool(result.converged)
+    assert int(result.iterations) >= 1
+
+
+def test_solve_mesh_routes_contour_through_distributed():
+    """A mesh in the options dispatches to the shard_map path."""
+    from repro import jax_compat
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+    g = GRAPHS["multi_component"]()
+    oracle = connected_components_oracle(*g.to_numpy())
+    result = solve(g, SolveOptions(algorithm="contour", mesh=mesh))
+    assert (np.asarray(result.labels) == oracle).all()
+    assert bool(result.converged)
+
+
+@pytest.mark.parametrize("variant", VARIANTS + ("C-3",))
+def test_solve_contour_variants(variant):
+    g = GRAPHS["multi_component"]()
+    oracle = connected_components_oracle(*g.to_numpy())
+    result = solve(g, variant=variant)
+    assert (np.asarray(result.labels) == oracle).all(), variant
+
+
+def test_solve_overrides_and_aliases():
+    g = GRAPHS["path"]()
+    oracle = connected_components_oracle(*g.to_numpy())
+    # kwargs override the options object; aliases resolve
+    r = solve(g, SolveOptions(algorithm="contour"), algorithm="lp")
+    assert (np.asarray(r.labels) == oracle).all()
+    r2 = solve(g, algorithm="connectit")
+    assert (np.asarray(r2.labels) == oracle).all()
+
+
+def test_solve_validation_errors():
+    g = GRAPHS["path"]()
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        solve(g, algorithm="dijkstra")
+    with pytest.raises(ValueError, match="variant"):
+        solve(g, algorithm="fastsv", variant="C-2")
+    with pytest.raises(ValueError, match="unknown variant"):
+        solve(g, variant="C-banana")
+    with pytest.raises(ValueError, match="backend"):
+        solve(g, backend="cuda")
+    with pytest.raises(ValueError, match="mesh"):
+        solve(g, algorithm="distributed")  # needs a mesh
+    with pytest.raises(ValueError, match="does not run on a mesh"):
+        from repro import jax_compat
+        mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+        solve(g, SolveOptions(algorithm="fastsv", mesh=mesh))
+    with pytest.raises(TypeError, match="SolveOptions"):
+        solve(g, {"algorithm": "contour"})
+
+
+def test_options_frozen_and_replace():
+    opts = SolveOptions()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.algorithm = "fastsv"
+    opts2 = opts.replace(algorithm="fastsv", max_iters=7)
+    assert opts2.algorithm == "fastsv" and opts2.max_iters == 7
+    assert opts.algorithm == "contour"  # original untouched
+
+
+def test_solve_max_iters_cutoff_reports_not_converged():
+    g = gen.path(4_000, seed=7)
+    result = solve(g, algorithm="label_propagation", max_iters=3)
+    assert not bool(result.converged)
+    assert int(result.iterations) == 3
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_lists_every_family():
+    assert set(SINGLE_DEVICE_ALGOS) | {"distributed"} <= set(list_solvers())
+    spec = get_solver("contour")
+    assert spec.paper_ref  # DESIGN.md §9 mapping is populated
+    assert get_solver("lp").name == "label_propagation"
+
+
+def test_registry_custom_solver_roundtrip():
+    """A new family plugs in without touching the facade."""
+    def oracle_solver(graph, opts, init_labels):
+        L = connected_components_oracle(*graph.to_numpy())
+        return jnp.asarray(L, jnp.int32), jnp.int32(1), jnp.array(True)
+
+    register_solver(SolverSpec(name="_test_oracle", fn=oracle_solver,
+                               supports_batch=False, runs_on="host"))
+    g = GRAPHS["rmat"]()
+    result = solve(g, algorithm="_test_oracle")
+    assert (np.asarray(result.labels)
+            == connected_components_oracle(*g.to_numpy())).all()
+    assert bool(result.converged)
+
+
+# ---------------------------------------------------------------- result
+
+def test_component_result_utilities():
+    g = GRAPHS["multi_component"]()
+    oracle = connected_components_oracle(*g.to_numpy())
+    result = solve(g)
+    k = len(np.unique(oracle))
+    assert result.n_components == k
+    compact = result.compact_labels()
+    assert compact.min() == 0 and compact.max() == k - 1
+    assert len(np.unique(compact)) == k
+    # compact labeling induces the same partition
+    assert len(np.unique(oracle * k + compact)) == k
+    sizes = result.component_sizes()
+    assert sizes.sum() == g.n_vertices
+    # same_component agrees with the oracle on a vertex sample
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, g.n_vertices, 64)
+    v = rng.integers(0, g.n_vertices, 64)
+    np.testing.assert_array_equal(result.same_component(u, v),
+                                  oracle[u] == oracle[v])
+    assert result.same_component(0, 0) is True
+    # scalar-vs-array broadcasts instead of collapsing to bool
+    np.testing.assert_array_equal(result.same_component(0, v),
+                                  oracle[0] == oracle[v])
+
+
+def test_component_result_is_a_pytree():
+    g = GRAPHS["path"]()
+    result = solve(g)
+    leaves, treedef = jax.tree_util.tree_flatten(result)
+    assert len(leaves) == 3
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (np.asarray(rebuilt.labels) == np.asarray(result.labels)).all()
+    # flows through jit
+    out = jax.jit(lambda r: r)(result)
+    assert isinstance(out, ComponentResult)
+    assert (np.asarray(out.labels) == np.asarray(result.labels)).all()
+
+
+# ---------------------------------------------------------------- batching
+
+@pytest.mark.parametrize("algorithm",
+                         ("contour", "fastsv", "label_propagation",
+                          "union_find"))
+def test_solve_batch_matches_per_graph_oracle(algorithm):
+    graphs = [gen.path(300, seed=8), gen.rmat(9, seed=9),
+              gen.grid2d(12, 24), gen.star(150, seed=10)]
+    batch = solve_batch(graphs, algorithm=algorithm)
+    assert batch.is_batched
+    parts = batch.unstack()
+    assert len(parts) == len(graphs)
+    for part, g in zip(parts, graphs):
+        oracle = connected_components_oracle(*g.to_numpy())
+        assert part.labels.shape[0] == g.n_vertices
+        assert (np.asarray(part.labels) == oracle).all(), algorithm
+        assert bool(part.converged)
+
+
+def test_solve_batch_single_results_vs_solo_solves():
+    """Batched labels are bit-exact vs solo solves (padding is a no-op)."""
+    graphs = [gen.rmat(8, seed=s) for s in range(3)]
+    batch = solve_batch(graphs)
+    for part, g in zip(batch.unstack(), graphs):
+        solo = solve(g)
+        assert (np.asarray(part.labels) == np.asarray(solo.labels)).all()
+        assert int(part.iterations) == int(solo.iterations)
+
+
+def test_stack_graphs_pads_with_self_loops():
+    g1, g2 = gen.path(10, seed=0), gen.path(50, seed=1)
+    batched = stack_graphs([g1, g2])
+    assert batched.src.shape == (2, g2.n_edges)
+    assert batched.n_vertices == 50
+    # padded tail of the smaller graph is self-loops
+    pad_s = np.asarray(batched.src[0, g1.n_edges:])
+    pad_d = np.asarray(batched.dst[0, g1.n_edges:])
+    assert (pad_s == pad_d).all()
+
+
+def test_solve_batch_rejects_mesh_and_distributed():
+    graphs = [gen.path(20, seed=0), gen.path(30, seed=1)]
+    from repro import jax_compat
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="mesh"):
+        solve_batch(graphs, SolveOptions(mesh=mesh))
+    with pytest.raises(ValueError, match="batched"):
+        solve_batch(graphs, algorithm="distributed")
+
+
+def test_batched_component_result_guards_scalar_views():
+    batch = solve_batch([gen.path(20, seed=0), gen.path(30, seed=1)])
+    with pytest.raises(ValueError, match="unstack"):
+        batch.n_components
+    with pytest.raises(ValueError, match="unstack"):
+        batch.same_component(0, 1)

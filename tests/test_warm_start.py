@@ -1,0 +1,171 @@
+"""Warm-start / incremental solving: correctness against the from-scratch
+oracle and the monotone-labels guarantee (min-mapping labels never
+increase across a warm-started run)."""
+import numpy as np
+import pytest
+
+from repro import SolveOptions, solve, solve_batch
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle
+
+WARM_ALGOS = ("contour", "fastsv", "label_propagation", "union_find")
+
+
+def _base_and_grown(kind: str, seed: int):
+    """A base graph and the same graph with extra cross-component edges."""
+    rng = np.random.default_rng(seed)
+    if kind == "components_mix":
+        base = gen.components_mix(
+            [gen.path(800, seed=seed), gen.rmat(10, seed=seed + 1),
+             gen.grid2d(20, 20)], seed=seed + 2)
+    elif kind == "rmat":
+        base = gen.rmat(11, seed=seed)
+    else:
+        raise ValueError(kind)
+    n = base.n_vertices
+    grown = base.add_edges(rng.integers(0, n, 12), rng.integers(0, n, 12))
+    return base, grown
+
+
+@pytest.mark.parametrize("kind", ("components_mix", "rmat"))
+@pytest.mark.parametrize("algorithm", WARM_ALGOS)
+def test_warm_start_matches_from_scratch_oracle(kind, algorithm):
+    base, grown = _base_and_grown(kind, seed=11)
+    opts = SolveOptions(algorithm=algorithm)
+    prev = solve(base, opts)
+    assert bool(prev.converged)
+
+    warm = solve(grown, opts, warm_start=prev)
+    oracle = connected_components_oracle(*grown.to_numpy())
+    assert (np.asarray(warm.labels) == oracle).all(), (kind, algorithm)
+    assert bool(warm.converged)
+    # monotonicity: a warm-started run only ever lowers labels
+    assert (np.asarray(warm.labels) <= np.asarray(prev.labels)).all()
+
+
+@pytest.mark.parametrize("kind", ("components_mix", "rmat"))
+def test_warm_start_accepts_raw_label_arrays(kind):
+    base, grown = _base_and_grown(kind, seed=23)
+    prev = solve(base)
+    oracle = connected_components_oracle(*grown.to_numpy())
+    # raw array instead of ComponentResult; options-field spelling too
+    warm = solve(grown, warm_start=np.asarray(prev.labels))
+    assert (np.asarray(warm.labels) == oracle).all()
+    warm2 = solve(grown, SolveOptions(warm_start=prev.labels))
+    assert (np.asarray(warm2.labels) == oracle).all()
+
+
+def test_warm_start_after_vertex_growth():
+    """add_edges may grow the vertex set; old labels still warm-start."""
+    base = gen.rmat(9, seed=3)
+    n_old = base.n_vertices
+    grown = base.add_edges([0, 5], [n_old + 3, n_old + 7],
+                           n_vertices=n_old + 8)
+    prev = solve(base)
+    warm = solve(grown, warm_start=prev)
+    oracle = connected_components_oracle(*grown.to_numpy())
+    assert (np.asarray(warm.labels) == oracle).all()
+
+
+def test_warm_start_no_new_edges_is_a_fixed_point():
+    """Re-solving with its own result converges immediately."""
+    g = gen.components_mix([gen.path(500, seed=5), gen.rmat(9, seed=6)],
+                           seed=7)
+    prev = solve(g)
+    again = solve(g, warm_start=prev)
+    assert (np.asarray(again.labels) == np.asarray(prev.labels)).all()
+    assert int(again.iterations) <= 2  # detect-convergence sweep only
+
+
+def test_warm_start_iteration_savings_on_long_diameter():
+    """The point of warm starts: few new edges, few new iterations."""
+    base = gen.path(30_000, seed=8)
+    rng = np.random.default_rng(9)
+    grown = base.add_edges(rng.integers(0, 100, 3),
+                           rng.integers(29_900, 30_000, 3))
+    prev = solve(base)
+    cold = solve(grown)
+    warm = solve(grown, warm_start=prev)
+    assert (np.asarray(warm.labels) == np.asarray(cold.labels)).all()
+    assert int(warm.iterations) < int(cold.iterations)
+
+
+def test_warm_start_distributed_mesh():
+    import jax
+    from repro import jax_compat
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+    base, grown = _base_and_grown("components_mix", seed=31)
+    opts = SolveOptions(mesh=mesh)
+    prev = solve(base, opts)
+    warm = solve(grown, opts, warm_start=prev)
+    oracle = connected_components_oracle(*grown.to_numpy())
+    assert (np.asarray(warm.labels) == oracle).all()
+    assert (np.asarray(warm.labels) <= np.asarray(prev.labels)).all()
+
+
+def test_warm_start_batched():
+    """Per-graph warm starts flow through solve_batch."""
+    bases, growns = [], []
+    for seed in (41, 42, 43):
+        b, g = _base_and_grown("rmat", seed=seed)
+        bases.append(b)
+        growns.append(g)
+    prev = solve_batch(bases)
+    warm = solve_batch(growns, warm_start=prev.unstack())
+    for part, g, p in zip(warm.unstack(), growns, prev.unstack()):
+        oracle = connected_components_oracle(*g.to_numpy())
+        assert (np.asarray(part.labels) == oracle).all()
+        assert (np.asarray(part.labels) <= np.asarray(p.labels)).all()
+
+
+def test_warm_start_batched_heterogeneous_sizes():
+    """A previous batched result warm-starts a fleet of *different-size*
+    graphs (padded rows are trimmed back per graph)."""
+    rng = np.random.default_rng(51)
+    bases = [gen.rmat(6, seed=1), gen.path(50, seed=2), gen.grid2d(5, 8)]
+    growns = [b.add_edges(rng.integers(0, b.n_vertices, 2),
+                          rng.integers(0, b.n_vertices, 2))
+              for b in bases]
+    prev = solve_batch(bases)
+    for ws in (prev, prev.labels):   # whole result, or stacked [B, n] array
+        warm = solve_batch(growns, warm_start=ws)
+        for part, g in zip(warm.unstack(), growns):
+            oracle = connected_components_oracle(*g.to_numpy())
+            assert (np.asarray(part.labels) == oracle).all()
+
+
+def test_warm_start_batched_via_options_field():
+    """SolveOptions.warm_start works for solve_batch like it does for
+    solve() — not just the per-call kwarg."""
+    bases, growns = [], []
+    for seed in (61, 62):
+        b, g = _base_and_grown("rmat", seed=seed)
+        bases.append(b)
+        growns.append(g)
+    prev = solve_batch(bases)
+    warm = solve_batch(growns, SolveOptions(warm_start=prev.unstack()))
+    cold = solve_batch(growns)
+    for part, cold_part, g in zip(warm.unstack(), cold.unstack(), growns):
+        oracle = connected_components_oracle(*g.to_numpy())
+        assert (np.asarray(part.labels) == oracle).all()
+        assert int(part.iterations) <= int(cold_part.iterations)
+
+
+def test_add_edges_validates_endpoints():
+    """Out-of-range endpoints must error eagerly, not silently clamp."""
+    g = gen.path(10, seed=0)
+    with pytest.raises(ValueError, match="n_vertices"):
+        g.add_edges([0], [10])          # forgot to grow the vertex set
+    with pytest.raises(ValueError, match=">= 0"):
+        g.add_edges([-1], [3])
+    grown = g.add_edges([0], [10], n_vertices=11)
+    assert grown.n_vertices == 11 and grown.n_edges == g.n_edges + 1
+
+
+def test_warm_start_validation():
+    g = gen.path(50, seed=0)
+    prev = solve(g)
+    with pytest.raises(ValueError, match="1-D"):
+        solve(g, warm_start=np.zeros((2, 50), np.int32))
+    with pytest.raises(ValueError, match="vertices"):
+        solve(g, warm_start=np.zeros(51, np.int32))
