@@ -1,0 +1,75 @@
+"""Sanity-gate a ``BENCH_connectivity.json`` artifact.
+
+Run in CI (and locally after ``python -m benchmarks.run``) so the
+committed perf artifact cannot silently rot::
+
+    python benchmarks/check_artifact.py [BENCH_connectivity.json]
+
+Fails (exit 1) when:
+
+* ``summary.all_correct`` is false — some method diverged from the
+  connectivity oracle;
+* ``summary.blocked_path_hlo_identical`` regressed — off-TPU the blocked
+  kernel path must lower to the exact same program as the XLA C-2 path
+  (the noise-free form of the "no slower" gate, DESIGN.md §6);
+* the frontier gate regressed — the work-adaptive ``C-2-cmp`` schedule
+  must visit strictly fewer edges than dense ``iterations × m`` on every
+  suite graph while reaching a bit-identical fixed point (DESIGN.md §10).
+
+Stdlib-only on purpose: the gate must run before (or without) the package
+environment, e.g. as a bare CI step.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(payload: dict) -> list:
+    """Return a list of gate-violation messages (empty = artifact sane)."""
+    errors = []
+    summary = payload.get("summary", {})
+    if not summary:
+        return ["artifact has no summary section"]
+    if not summary.get("all_correct", False):
+        bad = [f"{r['graph']}/{r['method']}"
+               for r in payload.get("records", []) if not r.get("correct")]
+        errors.append(f"summary.all_correct is false (bad rows: {bad})")
+    if "blocked_path_hlo_identical" in summary and \
+            not summary["blocked_path_hlo_identical"]:
+        errors.append(
+            "blocked_path_hlo_identical regressed: the dispatched kernel "
+            "path no longer lowers to the XLA C-2 program off-TPU")
+    for key in ("frontier_visits_fewer_edges", "frontier_bit_identical"):
+        if key in summary and not summary[key]:
+            # bit_identical None = not measured in that run, not a failure
+            bad = [g for g, row in payload.get("frontier_gate", {}).items()
+                   if not row.get("fewer_than_dense")
+                   or row.get("bit_identical") is False]
+            errors.append(f"{key} regressed (graphs: {bad})")
+    if "frontier_visits_fewer_edges" not in summary and \
+            int(payload.get("schema", 0)) >= 2:
+        errors.append("schema >= 2 artifact is missing the frontier gate")
+    return errors
+
+
+def main(argv) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_connectivity.json"
+    with open(path) as f:
+        payload = json.load(f)
+    errors = check(payload)
+    if errors:
+        for e in errors:
+            print(f"ARTIFACT GATE FAILED: {e}", file=sys.stderr)
+        return 1
+    summary = payload["summary"]
+    print(f"artifact gate ok: {path} "
+          f"(schema {payload.get('schema')}, {summary.get('n_graphs')} "
+          f"graphs, all_correct={summary.get('all_correct')}, "
+          f"frontier_visits_fewer_edges="
+          f"{summary.get('frontier_visits_fewer_edges')})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -9,7 +9,12 @@ DESIGN.md §8.5, with iteration count 1 by the paper's convention (§IV-C).
 ``C-2-blk`` is the kernel-subsystem path (DESIGN.md §3.4): the dispatched
 contour_mm backend (label-blocked Pallas on TPU, scatter-min under XLA on
 CPU hosts) iterated by the on-device ``lax.while_loop`` fixpoint of
-``contour_cc_fixpoint`` — zero per-iteration host syncs.  ``run_suite``
+``contour_cc_fixpoint`` — zero per-iteration host syncs.  ``C-2-cmp`` is
+C-2 under the work-adaptive frontier contraction schedule (DESIGN.md §10:
+sampling prefix, largest-component filter, periodic active-edge
+contraction) — its ``edges_visited`` counter must come in strictly under
+the dense ``iterations × m`` and its labels must be bit-identical to
+uncompacted C-2 (both gated in the artifact summary).  ``run_suite``
 results serialise to ``BENCH_connectivity.json`` (see ``records_to_json``)
 so the perf trajectory is machine-readable across PRs.
 """
@@ -29,7 +34,7 @@ from repro.graphs import generators as gen
 from repro.graphs.oracle import connected_components_oracle, labels_equivalent
 from repro.kernels.contour_mm.ops import contour_cc_fixpoint
 
-METHODS = list(VARIANTS) + ["C-2-blk", "FastSV", "ConnectIt"]
+METHODS = list(VARIANTS) + ["C-2-blk", "C-2-cmp", "FastSV", "ConnectIt"]
 
 # Every method (except the raw kernel-path fixpoint) runs through the
 # unified repro.connectivity.solve facade — the bench doubles as an
@@ -45,6 +50,12 @@ _METHOD_OPTIONS = {
 }
 _METHOD_OPTIONS["FastSV"] = SolveOptions(algorithm="fastsv")
 _METHOD_OPTIONS["ConnectIt"] = SolveOptions(algorithm="union_find")
+# the work-adaptive row: 2 sampling-prefix sweeps, largest-component
+# filter, then contraction every 2 iterations (backend pinned like the
+# other Contour rows so C-2 vs C-2-cmp isolates the schedule)
+_METHOD_OPTIONS["C-2-cmp"] = SolveOptions(
+    algorithm="contour", variant="C-2", backend="xla",
+    sampling=2, compact_every=2)
 
 
 @dataclasses.dataclass
@@ -57,6 +68,13 @@ class Record:
     iterations: int
     time_s: float
     correct: bool
+    # cumulative edges swept (None for solvers that do not count);
+    # iterations*m on the dense schedule, strictly less under the
+    # C-2-cmp frontier contraction — see DESIGN.md §10
+    edges_visited: Optional[float] = None
+    # labels elementwise-equal to this graph's uncompacted C-2 row
+    # (recorded for C-2-cmp only: the bit-identical frontier gate)
+    bit_identical: Optional[bool] = None
 
 
 def _block(out):
@@ -83,15 +101,18 @@ def bench_graph(name: str, gid: int, graph, *, repeats: int = 2,
     n = graph.n_vertices
     oracle = connected_components_oracle(*graph.to_numpy())
     records = []
+    method_labels = {}
     for method in methods or METHODS:
         # C-1 needs O(diameter) iterations (paper Fig. 1: up to 2369) —
         # one timed run is plenty on long-diameter graphs; ConnectIt is a
         # sequential host loop, also timed once.
         reps = 1 if method in ("C-1", "ConnectIt") else repeats
+        visited = None
         if method == "C-2-blk":
             fn = lambda: contour_cc_fixpoint(graph, backend="auto")
-            (labels, iters, _), dt = _time_jax(fn, reps)
+            (labels, iters, _, visited), dt = _time_jax(fn, reps)
             iters = int(iters)
+            visited = float(visited)
         elif method == "ConnectIt":
             # pure-NumPy host loop: nothing jit-compiles on its path
             # (solvers report their own converged flag), so time the one
@@ -106,11 +127,22 @@ def bench_graph(name: str, gid: int, graph, *, repeats: int = 2,
             fn = lambda o=opts: solve(graph, o)
             result, dt = _time_jax(fn, reps)
             labels, iters = result.labels, int(result.iterations)
+            if result.edges_visited is not None:
+                visited = float(result.edges_visited)
+        method_labels[method] = np.asarray(labels)
         ok = labels_equivalent(np.asarray(labels), oracle)
+        # the frontier gate's bit-identical half: the compacted fixed
+        # point must equal uncompacted C-2 elementwise, not just as a
+        # partition (both follow the min-vertex-id convention)
+        bit_identical = None
+        if method == "C-2-cmp" and "C-2" in method_labels:
+            bit_identical = bool(np.array_equal(method_labels["C-2-cmp"],
+                                                method_labels["C-2"]))
         records.append(Record(
             graph=name, graph_id=gid, n_vertices=n,
             n_edges=graph.n_edges, method=method,
-            iterations=iters, time_s=dt, correct=bool(ok)))
+            iterations=iters, time_s=dt, correct=bool(ok),
+            edges_visited=visited, bit_identical=bit_identical))
     return records
 
 
@@ -194,16 +226,65 @@ def blocked_vs_xla_gate(fast: bool = False,
     return out
 
 
+def frontier_gate(records: List[Record]) -> Dict[str, Dict[str, float]]:
+    """Per-graph work-adaptivity gate from the ``C-2-cmp`` rows.
+
+    For every graph: the frontier schedule must *visit strictly fewer
+    edges* than the dense ``iterations × m`` equivalent, while reaching a
+    fixed point *bit-identical* to uncompacted C-2 (``Record.bit_identical``
+    — computed elementwise in ``bench_graph``; ``None`` when the C-2 row
+    was not benchmarked alongside, recorded as not-measured rather than a
+    failure).
+
+    ``time_ratio_vs_dense`` is recorded for honesty, *not* gated: on the
+    XLA backend (this CPU host) the frontier limit is realised as
+    full-shape masked tiles plus an O(m log m) partition per compaction,
+    so the counter savings do **not** translate into wall time here —
+    C-2-cmp typically runs slower than C-2 on CPU.  The wall-time payoff
+    is the TPU blocked-kernel path, where the live-chunk count skips
+    whole grid steps (DESIGN.md §10); ``edges_visited`` is the
+    platform-independent work measure this gate certifies.
+    """
+    times = pivot(records, "time_s")
+    iters = pivot(records, "iterations")
+    out: Dict[str, Dict[str, float]] = {}
+    for r in records:
+        if r.method != "C-2-cmp" or r.edges_visited is None:
+            continue
+        # baseline = the *dense C-2 row's* iterations x m — using the
+        # compacted row's own (sampling-inflated) iteration count would
+        # let a schedule pass by beating a weaker baseline than the run
+        # it claims to improve on
+        dense_iters = iters.get(r.graph, {}).get("C-2", r.iterations)
+        dense = float(dense_iters) * r.n_edges
+        dense_t = times.get(r.graph, {}).get("C-2")
+        out[r.graph] = {
+            "edges_visited": r.edges_visited,
+            "dense_equiv": dense,
+            "work_saved_frac": 1.0 - r.edges_visited / dense if dense else 0.0,
+            "fewer_than_dense": bool(r.edges_visited < dense),
+            "bit_identical": r.bit_identical,
+            "time_ratio_vs_dense": (r.time_s / dense_t if dense_t else None),
+        }
+    return out
+
+
 def records_to_json(records: List[Record], fast: bool = False,
                     gate: Optional[Dict[str, Dict[str, float]]] = None) -> Dict:
     """Machine-readable benchmark artifact (``BENCH_connectivity.json``).
 
-    One entry per (graph, method) with time/iterations, plus a summary
-    comparing the kernel-subsystem path (``C-2-blk``: dispatched backend +
-    on-device fixpoint) against the seed XLA scatter-min path (``C-2``) —
-    the perf gate for the label-blocked refactor.  ``gate`` is the paired
-    interleaved measurement from :func:`blocked_vs_xla_gate` (drift-robust);
-    when absent the summary falls back to the figure-suite times.
+    One entry per (graph, method) with time/iterations (plus the
+    ``edges_visited`` work counter where the solver reports one — schema 2
+    addition), and a summary with two gates:
+
+    * the kernel-subsystem gate comparing ``C-2-blk`` (dispatched backend +
+      on-device fixpoint) against the seed XLA scatter-min path (``C-2``).
+      ``gate`` is the paired interleaved measurement from
+      :func:`blocked_vs_xla_gate` (drift-robust); when absent the summary
+      falls back to the figure-suite times;
+    * the frontier gate (:func:`frontier_gate`): the work-adaptive
+      ``C-2-cmp`` row must visit strictly fewer edges than dense
+      ``iterations × m`` with a bit-identical fixed point, per graph.
     """
     times = pivot(records, "time_s")
     if gate:
@@ -223,12 +304,21 @@ def records_to_json(records: List[Record], fast: bool = False,
     if gate:
         summary["blocked_path_hlo_identical"] = all(
             row.get("hlo_identical", False) for row in gate.values())
+    frontier = frontier_gate(records)
+    if frontier:
+        summary["frontier_visits_fewer_edges"] = all(
+            row["fewer_than_dense"] for row in frontier.values())
+        # None = not measured (C-2 row absent from the run) — only a
+        # computed False is a regression
+        summary["frontier_bit_identical"] = all(
+            row["bit_identical"] is not False for row in frontier.values())
     return {
-        "schema": 1,
+        "schema": 2,
         "suite": "paper_connectivity",
         "fast": fast,
         "summary": summary,
         "blocked_gate": gate or {},
+        "frontier_gate": frontier,
         "records": [dataclasses.asdict(r) for r in records],
     }
 

@@ -38,7 +38,7 @@ BODY = textwrap.dedent("""
         oracle = connected_components_oracle(*g.to_numpy())
         for lr in (1, 2, 4):
             t0 = time.perf_counter()
-            labels, rounds, _ = distributed_contour(
+            labels, rounds, _, _ = distributed_contour(
                 g, mesh, edge_axes=("data",), local_rounds=lr)
             dt = time.perf_counter() - t0
             ok = (np.asarray(labels) == oracle).all()

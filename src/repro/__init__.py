@@ -19,6 +19,7 @@ from repro.connectivity import (
     register_solver,
     solve,
     solve_batch,
+    stack_graphs,
 )
 
 __all__ = [
@@ -29,4 +30,5 @@ __all__ = [
     "register_solver",
     "solve",
     "solve_batch",
+    "stack_graphs",
 ]

@@ -21,15 +21,22 @@ import jax.numpy as jnp
 from repro.connectivity import minmap
 from repro.connectivity.options import SolveOptions
 from repro.connectivity.result import ComponentResult
-from repro.connectivity.solve import _resolve, resolve_warm_start
+from repro.connectivity.solve import _resolve, resolve_warm_start, \
+    solver_output
 from repro.graphs.structs import Graph
 
 
-def stack_graphs(graphs: Sequence[Graph]) -> Graph:
+def stack_graphs(graphs: Sequence[Graph], with_sizes: bool = False):
     """Pad ``graphs`` to a common shape and stack into one batched Graph.
 
     The result has ``src``/``dst`` of shape ``[B, max_m]`` and
     ``n_vertices = max_n``; edge padding is self-loops at vertex 0.
+
+    ``with_sizes=True`` additionally returns the original per-graph vertex
+    counts (a tuple) — the padded Graph cannot record them itself, and
+    without them ``ComponentResult.unstack()`` on a pre-batched solve has
+    no way to trim the padding vertices back off; thread them into
+    ``solve_batch(..., batch_sizes=sizes)``.
     """
     graphs = list(graphs)
     if not graphs:
@@ -37,11 +44,31 @@ def stack_graphs(graphs: Sequence[Graph]) -> Graph:
     n = max(g.n_vertices for g in graphs)
     m = max(max(g.n_edges for g in graphs), 1)
     padded = [g.pad_edges(m) for g in graphs]
-    return Graph(
+    stacked = Graph(
         src=jnp.stack([g.src for g in padded]),
         dst=jnp.stack([g.dst for g in padded]),
         n_vertices=n,
     )
+    if with_sizes:
+        return stacked, tuple(g.n_vertices for g in graphs)
+    return stacked
+
+
+def _resolve_batch_sizes(batch_sizes, default, n: int):
+    """Validate caller-provided per-graph vertex counts (or use default)."""
+    if batch_sizes is None:
+        return default
+    sizes = tuple(int(s) for s in batch_sizes)
+    if len(sizes) != len(default):
+        raise ValueError(
+            f"batch_sizes has {len(sizes)} entries for {len(default)} "
+            "graphs")
+    for i, s in enumerate(sizes):
+        if not 1 <= s <= n:
+            raise ValueError(
+                f"batch_sizes[{i}] = {s} outside [1, {n}] (the padded "
+                "vertex count)")
+    return sizes
 
 
 def _stack_warm_starts(warm_start, graphs: List[Graph], n: int):
@@ -77,6 +104,7 @@ def solve_batch(
     options: Optional[SolveOptions] = None,
     *,
     warm_start=None,
+    batch_sizes: Optional[Sequence[int]] = None,
     **overrides,
 ) -> ComponentResult:
     """Solve connectivity on a batch of graphs in one vmapped program.
@@ -87,6 +115,12 @@ def solve_batch(
       options / overrides: as for :func:`repro.connectivity.solve`.
       warm_start: per-graph previous labels — a sequence (arrays or
         :class:`ComponentResult`) or a stacked ``[B, n]`` array.
+      batch_sizes: true per-graph vertex counts, for trimming padding in
+        ``unstack()``.  Required to get trimmed results from an
+        already-batched Graph (whose padded ``n_vertices`` says nothing
+        about the originals — ``stack_graphs(..., with_sizes=True)``
+        returns the right tuple); optional override for a sequence, whose
+        own sizes are recorded by default.
 
     Returns:
       a batched :class:`ComponentResult` (``labels [B, n]``,
@@ -102,15 +136,22 @@ def solve_batch(
 
     if isinstance(graphs, Graph):
         batched = graphs
-        sizes = tuple([batched.n_vertices] * int(batched.src.shape[0]))
+        n_graphs = int(batched.src.shape[0])
+        sizes = _resolve_batch_sizes(
+            batch_sizes, (batched.n_vertices,) * n_graphs,
+            batched.n_vertices)
+        # per-graph views are trimmed to the true sizes so warm-start
+        # length normalisation sees the same graphs the caller stacked
         per_graph = [
             Graph(src=batched.src[i], dst=batched.dst[i],
-                  n_vertices=batched.n_vertices)
-            for i in range(int(batched.src.shape[0]))
+                  n_vertices=sizes[i])
+            for i in range(n_graphs)
         ]
     else:
         per_graph = list(graphs)
-        sizes = tuple(g.n_vertices for g in per_graph)
+        sizes = _resolve_batch_sizes(
+            batch_sizes, tuple(g.n_vertices for g in per_graph),
+            max((g.n_vertices for g in per_graph), default=1))
         batched = stack_graphs(per_graph)
     n = batched.n_vertices
 
@@ -121,13 +162,14 @@ def solve_batch(
 
     if spec.supports_batch:
         def one(s, d, L0):
-            return spec.fn(Graph(src=s, dst=d, n_vertices=n), opts, L0)
+            return solver_output(
+                spec.fn(Graph(src=s, dst=d, n_vertices=n), opts, L0))
 
         if init_b is None:
-            labels, iterations, converged = jax.vmap(
+            labels, iterations, converged, edges_visited = jax.vmap(
                 lambda s, d: one(s, d, None))(batched.src, batched.dst)
         else:
-            labels, iterations, converged = jax.vmap(one)(
+            labels, iterations, converged, edges_visited = jax.vmap(one)(
                 batched.src, batched.dst, init_b)
     elif spec.runs_on == "host":
         # sequential host solver (union-find): plain per-graph loop over
@@ -135,12 +177,17 @@ def solve_batch(
         outs = []
         for i, g in enumerate(per_graph):
             init_i = None if init_b is None else init_b[i]
-            outs.append(spec.fn(Graph(src=g.src, dst=g.dst, n_vertices=n),
-                                opts, init_i))
-        labels = jnp.stack([L for L, _, _ in outs])
+            outs.append(solver_output(
+                spec.fn(Graph(src=g.src, dst=g.dst, n_vertices=n),
+                        opts, init_i)))
+        labels = jnp.stack([L for L, _, _, _ in outs])
         iterations = jnp.stack([jnp.asarray(it, jnp.int32)
-                                for _, it, _ in outs])
-        converged = jnp.stack([jnp.asarray(c, bool) for _, _, c in outs])
+                                for _, it, _, _ in outs])
+        converged = jnp.stack([jnp.asarray(c, bool) for _, _, c, _ in outs])
+        evs = [ev for _, _, _, ev in outs]
+        edges_visited = (None if any(ev is None for ev in evs)
+                         else jnp.stack([jnp.asarray(ev, jnp.float32)
+                                         for ev in evs]))
     else:
         raise ValueError(
             f"solver {spec.name!r} does not support batched solving")
@@ -148,4 +195,7 @@ def solve_batch(
     return ComponentResult(labels=labels,
                            iterations=jnp.asarray(iterations, jnp.int32),
                            converged=jnp.asarray(converged, bool),
-                           batch_sizes=sizes)
+                           batch_sizes=sizes,
+                           edges_visited=(
+                               None if edges_visited is None
+                               else jnp.asarray(edges_visited, jnp.float32)))

@@ -28,6 +28,13 @@ facade threads the plan it resolves this way.
 ``init_labels`` warm-starts the fixpoint from a previous solve's labels
 (see :func:`repro.connectivity.minmap.resolve_init_labels` for why that is
 correct); labels decrease monotonically from the given start.
+
+``sampling`` / ``compact_every`` enable the work-adaptive frontier
+contraction schedule of ``repro.connectivity.frontier`` (sample-prefix
+sweeps, the post-sampling largest-component filter, periodic active-edge
+contraction) — same fixed point bit-for-bit, but sweeps and the
+early-convergence check only touch the live edge prefix.  ``C-Syn`` is
+kept Alg.-1-verbatim and rejects the adaptive schedule.
 """
 from __future__ import annotations
 
@@ -37,6 +44,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.connectivity import frontier as fr
 from repro.connectivity import minmap as lab
 from repro.graphs.structs import Graph
 from repro.kernels.contour_mm import ops as mm_ops
@@ -55,30 +63,36 @@ class ContourState(NamedTuple):
 
 
 def _make_relax(backend, plan):
-    """relax(L, src, dst, order) on the chosen backend/tile plan."""
+    """relax(L, src, dst, order, limit) on the chosen backend/tile plan."""
     if plan is None:
-        def relax(L, src, dst, order):
+        def relax(L, src, dst, order, limit):
             return mm_ops.mm_relax_backend(L, src, dst, order=order,
-                                           backend=backend)
+                                           backend=backend,
+                                           edge_limit=limit)
     else:
-        def relax(L, src, dst, order):
+        def relax(L, src, dst, order, limit):
             return mm_ops.mm_relax_backend(
                 L, src, dst, order=order, backend=backend,
                 block_edges=plan.block_edges, label_block=plan.label_block,
-                chunk_updates=plan.chunk_updates, interpret=plan.interpret)
+                chunk_updates=plan.chunk_updates, interpret=plan.interpret,
+                edge_limit=limit)
     return relax
 
 
 def _make_step(variant: str, warmup: int, async_compress: int,
                backend: str = "xla", plan=None):
-    """Return step(L, it, src, dst) -> L_new for the chosen variant."""
+    """Return step(L, it, src, dst, limit) -> L_new for the chosen variant.
+
+    ``limit`` is the work-adaptive frontier bound (None for the dense
+    schedule: every edge, every sweep).
+    """
     relax = _make_relax(backend, plan)
 
-    def sweep_sync(L, src, dst, order):
+    def sweep_sync(L, src, dst, order, limit):
         """Alg. 1 body: one synchronous MM^order sweep."""
-        return relax(L, src, dst, order)
+        return relax(L, src, dst, order, limit)
 
-    def sweep_async(L, src, dst, order, jump_rounds):
+    def sweep_async(L, src, dst, order, jump_rounds, limit):
         """Optimised sweep: MM^order + pointer-jump recompaction.
 
         ``jump_rounds`` realises high-order variants; ``async_compress``
@@ -86,39 +100,41 @@ def _make_step(variant: str, warmup: int, async_compress: int,
         inside the same iteration, mirroring the paper's in-place
         updates).
         """
-        L = relax(L, src, dst, order)
+        L = relax(L, src, dst, order, limit)
         return lab.pointer_jump(L, rounds=jump_rounds + async_compress)
 
     if variant == "C-Syn":
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             del it
-            return sweep_sync(L, src, dst, 2)
+            return sweep_sync(L, src, dst, 2, limit)
     elif variant == "C-1":
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             del it
-            return sweep_async(L, src, dst, 1, 0)
+            return sweep_async(L, src, dst, 1, 0, limit)
     elif variant == "C-2":
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             del it
-            return sweep_async(L, src, dst, 2, 0)
+            return sweep_async(L, src, dst, 2, 0, limit)
     elif variant == "C-m":
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             del it
-            return sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS)
+            return sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS, limit)
     elif variant == "C-11mm":
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             return jax.lax.cond(
                 it < warmup,
-                lambda L: sweep_async(L, src, dst, 1, 0),
-                lambda L: sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS),
+                lambda L: sweep_async(L, src, dst, 1, 0, limit),
+                lambda L: sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
+                                      limit),
                 L,
             )
     elif variant == "C-1m1m":
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             return jax.lax.cond(
                 it % 2 == 0,
-                lambda L: sweep_async(L, src, dst, 1, 0),
-                lambda L: sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS),
+                lambda L: sweep_async(L, src, dst, 1, 0, limit),
+                lambda L: sweep_async(L, src, dst, 2, _CM_JUMP_ROUNDS,
+                                      limit),
                 L,
             )
     elif variant.startswith("C-") and variant[2:].isdigit():
@@ -129,9 +145,9 @@ def _make_step(variant: str, warmup: int, async_compress: int,
         # this literal form exists to validate that equivalence.
         order = int(variant[2:])
 
-        def step(L, it, src, dst):
+        def step(L, it, src, dst, limit=None):
             del it
-            return sweep_async(L, src, dst, order, 0)
+            return sweep_async(L, src, dst, order, 0, limit)
     else:
         raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS} "
                          "or literal 'C-<h>'")
@@ -141,7 +157,8 @@ def _make_step(variant: str, warmup: int, async_compress: int,
 @functools.partial(
     jax.jit,
     static_argnames=("n_vertices", "variant", "max_iters", "warmup",
-                     "async_compress", "backend", "plan"),
+                     "async_compress", "backend", "plan", "sampling",
+                     "compact_every"),
 )
 def contour_labels(
     src: jax.Array,
@@ -155,18 +172,42 @@ def contour_labels(
     async_compress: int = 1,
     backend: str = "xla",
     plan=None,
+    sampling: int = 0,
+    compact_every: int = 0,
 ):
-    """Run Contour; returns (labels[n], n_iterations, converged).
+    """Run Contour; returns (labels[n], n_iterations, converged, visited).
 
     Labels converge to the minimum vertex id of each component;
     ``converged`` is the loop's own fixed-point flag (False iff the
     ``max_iters`` budget ran out first).  ``init_labels`` warm-starts
     from a previous solve (labels only ever decrease from the given
-    start); ``plan`` pins kernel tile sizes.
+    start); ``plan`` pins kernel tile sizes.  ``visited`` is a float32
+    cumulative edges-swept counter: ``n_iterations * m`` for the dense
+    schedule, the sum of per-sweep frontier sizes when ``sampling`` /
+    ``compact_every`` enable the work-adaptive contraction schedule
+    (``repro.connectivity.frontier``).
     """
-    step = _make_step(variant, warmup, async_compress, backend, plan)
+    if warmup < 0 or async_compress < 0:
+        raise ValueError("warmup and async_compress must be >= 0, got "
+                         f"{warmup} / {async_compress}")
+    if sampling < 0 or compact_every < 0:
+        raise ValueError("sampling and compact_every must be >= 0, got "
+                         f"{sampling} / {compact_every}")
+    adaptive = sampling > 0 or compact_every > 0
     sync = variant == "C-Syn"
+    if adaptive and sync:
+        raise ValueError(
+            "C-Syn is the Alg.-1-verbatim reference and does not take the "
+            "work-adaptive schedule; use C-2/C-m (or any async variant) "
+            "with sampling/compact_every")
+    step = _make_step(variant, warmup, async_compress, backend, plan)
     L0 = lab.resolve_init_labels(init_labels, n_vertices, src.dtype)
+
+    if adaptive:
+        L, it, done, _, visited = fr.adaptive_fixpoint(
+            src, dst, L0, step, n_vertices=n_vertices, sampling=sampling,
+            compact_every=compact_every, max_iters=max_iters)
+        return L, it, done, visited
 
     def cond(s: ContourState):
         return (~s.done) & (s.it < max_iters)
@@ -185,7 +226,8 @@ def contour_labels(
     # restricted to edge endpoints is a star forest; interior tree vertices
     # of padded/isolated chains may still be one hop away.
     L = lab.pointer_jump(out.L, rounds=1)
-    return L, out.it, out.done
+    visited = out.it.astype(jnp.float32) * src.shape[0]
+    return L, out.it, out.done, visited
 
 
 def contour(graph: Graph, **kw):
@@ -195,5 +237,5 @@ def contour(graph: Graph, **kw):
 
 def connected_components(graph: Graph, variant: str = "C-2") -> jax.Array:
     """Min-vertex-id component labels (prefer ``repro.connectivity.solve``)."""
-    L, _, _ = contour(graph, variant=variant)
+    L, _, _, _ = contour(graph, variant=variant)
     return L

@@ -25,6 +25,15 @@ by ~k× on diameter-bound graphs.
 
 ``init_labels`` warm-starts the replicated label array from a previous
 solve — the only change to the round structure is the initial replica.
+
+``sampling`` / ``compact_every`` enable the work-adaptive frontier
+contraction (``repro.connectivity.frontier``) *per shard*: each device
+samples a prefix of its local edge shard, retires its local edges into
+the largest component after the sampling phase, and periodically contracts
+its own active prefix — the shard-local edge arrays and ``active_m``
+counts are loop state, so the schedule adds no collective traffic (the
+per-round ``pmin`` stays the only cross-device exchange; the counted
+``edges_visited`` is ``psum``-reduced inside the existing round).
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import jax_compat
+from repro.connectivity import frontier as fr
 from repro.connectivity import minmap as lab
 from repro.graphs.structs import Graph
 from repro.kernels.contour_mm import ops as mm_ops
@@ -45,6 +55,16 @@ class _State(NamedTuple):
     L: jax.Array
     it: jax.Array
     done: jax.Array
+
+
+class _FrontierShardState(NamedTuple):
+    L: jax.Array
+    it: jax.Array
+    done: jax.Array
+    src: jax.Array         # local shard, [active | retired] layout
+    dst: jax.Array
+    active_m: jax.Array    # live count of this shard's prefix
+    visited: jax.Array     # float32, psum-reduced (identical on all shards)
 
 
 def _round_up(x: int, k: int) -> int:
@@ -61,53 +81,100 @@ def distributed_contour(
     async_compress: int = 1,
     backend: str = "xla",
     init_labels: Optional[jax.Array] = None,
+    sampling: int = 0,
+    compact_every: int = 0,
 ):
     """Run Contour C-2 with edges sharded over ``edge_axes`` of ``mesh``.
 
-    Returns ``(labels, n_global_rounds, converged)``.  Works on any mesh
-    whose
+    Returns ``(labels, n_global_rounds, converged, edges_visited)``.
+    Works on any mesh whose
     ``edge_axes`` product divides the (padded) edge count — the production
     meshes in ``repro.launch.mesh`` and the multi-device CPU test mesh
     alike.  ``backend`` selects the per-shard sweep realisation through
     the shared ``kernels.contour_mm`` dispatch layer ("xla" scatter-min by
     default; "pallas_blocked"/"auto" for the label-blocked TPU kernel).
     """
+    if sampling < 0 or compact_every < 0:
+        raise ValueError("sampling and compact_every must be >= 0, got "
+                         f"{sampling} / {compact_every}")
     n_shards = 1
     for a in edge_axes:
         n_shards *= mesh.shape[a]
     g = graph.pad_edges(_round_up(max(graph.n_edges, n_shards), n_shards))
     n = g.n_vertices
+    m_loc = g.n_edges // n_shards
     axis = tuple(edge_axes)
+    adaptive = sampling > 0 or compact_every > 0
 
     edge_spec = P(axis if len(axis) > 1 else axis[0])
     lbl_spec = P()  # replicated
 
-    def body(src_loc, dst_loc, L0):
-        def cond(s: _State):
-            return (~s.done) & (s.it < max_iters)
-
-        def step(s: _State):
-            L = s.L
+    def body(src_in, dst_in, L0):
+        def relax_rounds(L, src_loc, dst_loc, limit):
             for _ in range(local_rounds):
                 L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
-                                            backend=backend)
+                                            backend=backend,
+                                            edge_limit=limit)
                 L = lab.pointer_jump(L, rounds=async_compress)
             # the one collective of the round: elementwise min across shards
-            L = jax.lax.pmin(L, axis)
-            ok_local = lab.converged_early(L, src_loc, dst_loc)
-            ok = jnp.bool_(jax.lax.pmin(ok_local.astype(jnp.int32), axis))
-            return _State(L=L, it=s.it + 1, done=ok)
+            return jax.lax.pmin(L, axis)
+
+        def all_shards_ok(ok_local):
+            return jnp.bool_(jax.lax.pmin(ok_local.astype(jnp.int32), axis))
+
+        if not adaptive:
+            def cond(s: _State):
+                return (~s.done) & (s.it < max_iters)
+
+            def step(s: _State):
+                L = relax_rounds(s.L, src_in, dst_in, None)
+                ok = all_shards_ok(lab.converged_early(L, src_in, dst_in))
+                return _State(L=L, it=s.it + 1, done=ok)
+
+            out = jax.lax.while_loop(
+                cond, step,
+                _State(L=L0, it=jnp.int32(0), done=jnp.array(False)))
+            visited = out.it.astype(jnp.float32) * (local_rounds * g.n_edges)
+            return out.L, out.it, out.done, visited
+
+        sample_m = jnp.int32(fr.sample_prefix_m(m_loc))
+
+        def cond(s: _FrontierShardState):
+            return (~s.done) & (s.it < max_iters)
+
+        def step(s: _FrontierShardState):
+            limit = fr.frontier_limit(s.it, s.active_m, sample_m, sampling)
+            L = relax_rounds(s.L, s.src, s.dst, limit)
+            visited = s.visited + local_rounds * jax.lax.psum(
+                limit.astype(jnp.float32), axis)
+            ok = fr.gate_sampling_done(
+                all_shards_ok(
+                    fr.masked_converged_early(L, s.src, s.dst, s.active_m)),
+                s.it, sampling)
+            it1 = s.it + 1
+            # L is replicated post-pmin, so every shard agrees on the
+            # largest component and contracts its own edge shard against
+            # the same schedule (shared with the single-device engine)
+            src2, dst2, active2 = fr.apply_compaction(
+                L, s.src, s.dst, s.active_m, it1, sampling=sampling,
+                compact_every=compact_every, n_vertices=n)
+            return _FrontierShardState(L=L, it=it1, done=ok, src=src2,
+                                       dst=dst2, active_m=active2,
+                                       visited=visited)
 
         out = jax.lax.while_loop(
-            cond, step, _State(L=L0, it=jnp.int32(0), done=jnp.array(False))
-        )
-        return out.L, out.it, out.done
+            cond, step,
+            _FrontierShardState(L=L0, it=jnp.int32(0), done=jnp.array(False),
+                                src=src_in, dst=dst_in,
+                                active_m=jnp.int32(m_loc),
+                                visited=jnp.float32(0)))
+        return fr.compress_full(out.L), out.it, out.done, out.visited
 
     mapped = jax_compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(edge_spec, edge_spec, lbl_spec),
-        out_specs=(lbl_spec, lbl_spec, lbl_spec),
+        out_specs=(lbl_spec, lbl_spec, lbl_spec, lbl_spec),
     )
 
     src = jax.device_put(g.src, NamedSharding(mesh, edge_spec))
@@ -115,8 +182,8 @@ def distributed_contour(
     L0 = jax.device_put(
         lab.resolve_init_labels(init_labels, n, g.src.dtype),
         NamedSharding(mesh, lbl_spec))
-    L, it, done = jax.jit(mapped)(src, dst, L0)
-    return L, it, done
+    L, it, done, visited = jax.jit(mapped)(src, dst, L0)
+    return L, it, done, visited
 
 
 @functools.partial(

@@ -101,6 +101,24 @@ def is_star_forest(L: jax.Array) -> jax.Array:
     return jnp.all(L[L] == L)
 
 
+def check_labels_nonnegative(labels: jax.Array) -> None:
+    """Eagerly reject negative labels (mirrors ``Graph.add_edges``).
+
+    The ``min(init, iota)`` warm-start clamp lets negatives through, and
+    XLA gather then silently clamps the out-of-range index to 0 — merging
+    every poisoned vertex into component 0.  The check needs concrete
+    values, so it is a no-op on tracers; eager callers (the ``solve``
+    facade, ``solve_batch``, the distributed path) all funnel through it.
+    """
+    if not isinstance(labels, jax.core.Tracer) and labels.size:
+        lo = int(labels.min())
+        if lo < 0:
+            raise ValueError(
+                f"warm-start labels must be >= 0, got minimum {lo}; "
+                "negative ids would be clamped to vertex 0 by XLA gather "
+                "and silently merge the wrong components")
+
+
 def resolve_init_labels(
     init: Optional[jax.Array], n_vertices: int, dtype
 ) -> jax.Array:
@@ -119,15 +137,24 @@ def resolve_init_labels(
     * the result is clamped to ``min(init, iota)`` so the identity
       invariant ``L[v] <= v`` (which every solver here preserves and the
       monotonicity guarantee is stated against) holds from iteration 0.
+
+    Negative labels are rejected eagerly via
+    :func:`check_labels_nonnegative` (see there for why); under a trace
+    (e.g. ``solve`` called inside a user ``jax.jit``) the eager check
+    cannot fire, so negatives are instead *neutralised* to the identity
+    label — an always-valid cold start for that vertex — rather than left
+    for XLA gather to clamp to vertex 0 and merge wrong components.
     """
     iota = jnp.arange(n_vertices, dtype=dtype)
     if init is None:
         return iota
     init = jnp.asarray(init).astype(dtype)
+    check_labels_nonnegative(init)
     if init.shape[0] > n_vertices:
         raise ValueError(
             f"warm-start labels cover {init.shape[0]} vertices but the "
             f"graph has only {n_vertices}")
     if init.shape[0] < n_vertices:
         init = jnp.concatenate([init, iota[init.shape[0]:]])
+    init = jnp.where(init < 0, iota, init)
     return jnp.minimum(init, iota)

@@ -11,6 +11,10 @@ fields mirror the three decision layers of the system:
 * **kernel dispatch** — ``backend`` (``"auto"`` resolves through
   ``plan_contour_kernel``) or an explicit resolved
   :class:`~repro.kernels.contour_mm.ops.KernelPlan` in ``plan``;
+* **work schedule** — ``sampling``/``compact_every`` enable the
+  work-adaptive frontier contraction of ``repro.connectivity.frontier``
+  (sample-prefix sweeps, largest-component filter, periodic active-edge
+  contraction); both default to 0 = the paper's dense every-edge sweeps;
 * **placement** — ``mesh``/``edge_axes``/``local_rounds`` route the solve
   through the ``shard_map`` distributed path; ``mesh=None`` (default) is
   single-device.
@@ -47,6 +51,8 @@ class SolveOptions:
     max_iters: Optional[int] = None        # per-algorithm default if None
     warmup: int = 2                        # C-11mm's C-1 prefix length
     async_compress: int = 1                # in-iteration pointer-jump rounds
+    sampling: int = 0                      # frontier sample-prefix sweeps
+    compact_every: int = 0                 # contraction cadence (0 = dense)
     warm_start: Optional[Any] = None       # labels array or ComponentResult
 
     def replace(self, **updates) -> "SolveOptions":
@@ -63,6 +69,14 @@ class SolveOptions:
                              f"{self.local_rounds}")
         if self.max_iters is not None and self.max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        # negative counts would silently change the iteration math instead
+        # of failing: e.g. async_compress=-1 cancels C-m's jump rounds in
+        # pointer_jump(rounds=jump_rounds + async_compress)
+        for field in ("warmup", "async_compress", "sampling",
+                      "compact_every"):
+            value = getattr(self, field)
+            if value < 0:
+                raise ValueError(f"{field} must be >= 0, got {value}")
         if self.mesh is not None and not self.edge_axes:
             raise ValueError("edge_axes must be non-empty when a mesh is "
                              "given")

@@ -3,11 +3,14 @@
 A registered solver is a callable
 
     fn(graph: Graph, opts: SolveOptions, init_labels)
-        -> (labels, iterations, converged)
+        -> (labels, iterations, converged[, edges_visited])
 
 where ``init_labels`` is the resolved warm-start array (or None for a
 cold start) and ``converged`` is the solver's own fixed-point flag
-(False iff the iteration budget ran out).  The ``solve()`` facade looks solvers up here, so adding an
+(False iff the iteration budget ran out).  Edge-sweep solvers may append
+a float32 ``edges_visited`` work counter (the Contour families do — see
+``connectivity.frontier``); ``solve()``/``solve_batch`` normalise both
+arities.  The ``solve()`` facade looks solvers up here, so adding an
 algorithm family is one ``@register_solver`` away — no facade changes.
 
 The registry also records capability flags (warm start, batched ``vmap``

@@ -32,22 +32,30 @@ class ComponentResult:
       batch_sizes: static per-graph vertex counts of a batched solve
         (None for a single solve); used by :meth:`unstack` to trim padded
         vertices.
+      edges_visited: float32 scalar (``[B]`` batched) cumulative count of
+        edges swept by the solver, or None for solvers that do not count
+        (``iterations × m`` for dense edge-sweep schedules; strictly less
+        under the ``sampling``/``compact_every`` frontier contraction —
+        see ``repro.connectivity.frontier``).
     """
 
     labels: jax.Array
     iterations: jax.Array
     converged: jax.Array
     batch_sizes: Optional[Tuple[int, ...]] = None
+    edges_visited: Optional[jax.Array] = None
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
-        return (self.labels, self.iterations, self.converged), self.batch_sizes
+        children = (self.labels, self.iterations, self.converged,
+                    self.edges_visited)
+        return children, self.batch_sizes
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        labels, iterations, converged = children
+        labels, iterations, converged, edges_visited = children
         return cls(labels=labels, iterations=iterations, converged=converged,
-                   batch_sizes=aux)
+                   batch_sizes=aux, edges_visited=edges_visited)
 
     # -- lazy host-side views --------------------------------------------
     @property
@@ -108,6 +116,8 @@ class ComponentResult:
                 labels=self.labels[i, :sizes[i]],
                 iterations=self.iterations[i],
                 converged=self.converged[i],
+                edges_visited=(None if self.edges_visited is None
+                               else self.edges_visited[i]),
             )
             for i in range(n_graphs)
         ]

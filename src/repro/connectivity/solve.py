@@ -32,6 +32,7 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.connectivity import minmap
 from repro.connectivity.options import SolveOptions
 from repro.connectivity.registry import SolverSpec, get_solver
 from repro.connectivity.result import ComponentResult
@@ -60,7 +61,23 @@ def resolve_warm_start(warm_start, n_vertices: int):
     if labels.ndim != 1:
         raise ValueError(
             f"warm_start labels must be 1-D, got shape {labels.shape}")
+    # Negative-label check at the facade: device solvers reach
+    # minmap.resolve_init_labels only from inside jit, where the values
+    # are tracers and the eager check cannot fire.
+    minmap.check_labels_nonnegative(labels)
     return labels
+
+
+def solver_output(out):
+    """Normalise a registry solver's return to a uniform 4-tuple.
+
+    Solvers return ``(labels, iterations, converged)`` or the same plus a
+    float32 ``edges_visited`` work counter (see ``registry``); both
+    ``solve`` and ``solve_batch`` funnel through here.
+    """
+    labels, iterations, converged = out[:3]
+    edges_visited = out[3] if len(out) > 3 else None
+    return labels, iterations, converged, edges_visited
 
 
 def _resolve(options: Optional[SolveOptions],
@@ -124,7 +141,11 @@ def solve(
     if init is not None and not spec.supports_warm_start:
         raise ValueError(f"solver {spec.name!r} does not support warm "
                          "starts")
-    labels, iterations, converged = spec.fn(graph, opts, init)
+    labels, iterations, converged, edges_visited = solver_output(
+        spec.fn(graph, opts, init))
     return ComponentResult(labels=labels,
                            iterations=jnp.asarray(iterations, jnp.int32),
-                           converged=jnp.asarray(converged, bool))
+                           converged=jnp.asarray(converged, bool),
+                           edges_visited=(
+                               None if edges_visited is None
+                               else jnp.asarray(edges_visited, jnp.float32)))

@@ -50,6 +50,8 @@ def _contour_solver(graph, opts, init_labels):
         async_compress=opts.async_compress,
         backend=backend,
         plan=plan,
+        sampling=opts.sampling,
+        compact_every=opts.compact_every,
     )
 
 
@@ -67,6 +69,8 @@ def _distributed_solver(graph, opts, init_labels):
         async_compress=opts.async_compress,
         backend=opts.backend,
         init_labels=init_labels,
+        sampling=opts.sampling,
+        compact_every=opts.compact_every,
     )
 
 

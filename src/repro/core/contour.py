@@ -24,7 +24,7 @@ def contour_labels(src, dst, n_vertices, **kw):
     """
     warn_once("repro.core.contour.contour_labels",
               "repro.connectivity.solve(graph, algorithm='contour')")
-    labels, iters, _ = _contour_labels(src, dst, n_vertices, **kw)
+    labels, iters, _, _ = _contour_labels(src, dst, n_vertices, **kw)
     return labels, iters
 
 
@@ -32,7 +32,7 @@ def contour(graph, **kw):
     """Deprecated: use ``repro.connectivity.solve``."""
     warn_once("repro.core.contour.contour",
               "repro.connectivity.solve(graph)")
-    labels, iters, _ = _contour(graph, **kw)
+    labels, iters, _, _ = _contour(graph, **kw)
     return labels, iters
 
 

@@ -23,7 +23,7 @@ def distributed_contour(graph, mesh, **kw):
     """
     warn_once("repro.core.distributed.distributed_contour",
               "repro.connectivity.solve(graph, SolveOptions(mesh=mesh))")
-    labels, rounds, _ = _distributed_contour(graph, mesh, **kw)
+    labels, rounds, _, _ = _distributed_contour(graph, mesh, **kw)
     return labels, rounds
 
 

@@ -54,7 +54,7 @@ def _round_up(x, k):
 def _scatter_min_kernel(label_block: int, chunk: int):
     """Build the per-chunk kernel body for the given static tile sizes."""
 
-    def kernel(map_ref, t_ref, v_ref, l_in_ref, l_ref):
+    def kernel(map_ref, live_ref, t_ref, v_ref, l_in_ref, l_ref):
         c = pl.program_id(0)
         b = map_ref[c]
         # Output VMEM windows are uninitialized on each tile's first grid
@@ -67,16 +67,24 @@ def _scatter_min_kernel(label_block: int, chunk: int):
         def _():
             l_ref[...] = l_in_ref[...]
 
-        base = b * label_block
-        t_loc = t_ref[...] - base
-        v = v_ref[...]
-        valid = (t_loc >= 0) & (t_loc < label_block) & (v < _SENTINEL)
-        # Vectorized scatter-min: one-hot compare against every tile slot,
-        # then a min-reduce over the chunk axis (VPU; no serial chain).
-        cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, label_block), 1)
-        contrib = jnp.where(valid[:, None] & (cols == t_loc[:, None]),
-                            v[:, None], _SENTINEL)
-        l_ref[...] = jnp.minimum(l_ref[...], jnp.min(contrib, axis=0))
+        # Frontier skip: chunks past the live count hold only updates from
+        # inactive edges (binned past the last real label block), so the
+        # whole combine is elided — the work-adaptive contraction schedule
+        # shrinks per-sweep compute, not just the counted edge visits.
+        @pl.when(c < live_ref[0])
+        def _():
+            base = b * label_block
+            t_loc = t_ref[...] - base
+            v = v_ref[...]
+            valid = (t_loc >= 0) & (t_loc < label_block) & (v < _SENTINEL)
+            # Vectorized scatter-min: one-hot compare against every tile
+            # slot, then a min-reduce over the chunk axis (VPU; no serial
+            # chain).
+            cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, label_block),
+                                            1)
+            contrib = jnp.where(valid[:, None] & (cols == t_loc[:, None]),
+                                v[:, None], _SENTINEL)
+            l_ref[...] = jnp.minimum(l_ref[...], jnp.min(contrib, axis=0))
 
     return kernel
 
@@ -89,6 +97,7 @@ def binned_scatter_min_pallas(
     label_block: int = 2048,
     chunk_updates: int = 128,
     interpret: bool = True,
+    valid: jax.Array = None,
 ) -> jax.Array:
     """``L.at[targets].min(values)`` with ``L`` tiled by label block.
 
@@ -99,27 +108,41 @@ def binned_scatter_min_pallas(
       label_block: tile height ``B``; VMEM per step is ``4·B·(chunk+1)`` B.
       chunk_updates: updates processed per grid step.
       interpret: run in interpreter mode (CPU validation); False on TPU.
+      valid: optional bool[K] per-update liveness (the work-adaptive
+        frontier mask).  Dead updates are radix-binned into a trailing
+        *dead bin* past every label block; because bins are contiguous the
+        dead updates occupy the tail chunks of the padded stream, and the
+        kernel elides the combine for every chunk past the live count
+        (scalar-prefetched), skipping whole grid steps of VPU work.
     """
     n = L.shape[0]
     K = targets.shape[0]
     B = int(label_block)
     E = int(chunk_updates)
     n_blocks = (n + B - 1) // B
+    # With a frontier mask, dead updates get a bin of their own past the
+    # last real block so the stable radix sort pushes them to the tail.
+    n_bins = n_blocks + (0 if valid is None else 1)
     n_pad = n_blocks * B
-    if K + n_blocks * E >= 2**31:
+    if K + n_bins * E >= 2**31:
         raise ValueError(
-            f"update stream of {K} + {n_blocks}*{E} padding overflows int32 "
+            f"update stream of {K} + {n_bins}*{E} padding overflows int32 "
             "positions; raise label_block or split the sweep")
     L_pad = jnp.pad(L, (0, n_pad - n), constant_values=_SENTINEL)
 
     # -- Phase 1: radix-bin the update stream by target // B ---------------
     blk = targets // B
+    if valid is not None:
+        # dead updates: banished to the tail bin AND value-neutralised, so
+        # the grid-step skip is an optimisation, not a correctness gate
+        blk = jnp.where(valid, blk, n_blocks)
+        values = jnp.where(valid, values, _SENTINEL)
     order = jnp.argsort(blk, stable=True)
     t_sorted = targets[order]
     v_sorted = values[order]
     blk_sorted = blk[order]
 
-    counts = jnp.bincount(blk, length=n_blocks)
+    counts = jnp.bincount(blk, length=n_bins)
     padded_counts = _round_up(counts, E)
     offsets = jnp.concatenate(
         [jnp.zeros((1,), counts.dtype), jnp.cumsum(padded_counts)[:-1]])
@@ -128,7 +151,7 @@ def binned_scatter_min_pallas(
     # position in the boundary-aligned padded layout
     pos = offsets[blk_sorted] + (jnp.arange(K) - seg_start[blk_sorted])
 
-    T = _round_up(K, E) + n_blocks * E  # static capacity >= sum(padded)
+    T = _round_up(K, E) + n_bins * E  # static capacity >= sum(padded)
     t_pad = jnp.zeros((T,), targets.dtype).at[pos].set(t_sorted)
     v_pad = jnp.full((T,), _SENTINEL, values.dtype).at[pos].set(v_sorted)
 
@@ -136,23 +159,32 @@ def binned_scatter_min_pallas(
     chunk_block = jnp.clip(
         jnp.searchsorted(offsets, jnp.arange(n_chunks) * E, side="right") - 1,
         0, n_blocks - 1).astype(jnp.int32)
+    # Chunks holding live updates end where the dead bin begins; without a
+    # mask every chunk is live.  (Dead entries were value-masked to
+    # _SENTINEL above, so even a combine that did run would be a no-op —
+    # the skip saves compute, it is not load-bearing for correctness.)
+    if valid is None:
+        live_chunks = jnp.full((1,), n_chunks, jnp.int32)
+    else:
+        dead_start = jnp.cumsum(padded_counts)[n_blocks - 1]
+        live_chunks = (dead_start // E).astype(jnp.int32).reshape((1,))
 
     # -- Phase 2: one pallas_call over chunks, L tiled by BlockSpec --------
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(n_chunks,),
         in_specs=[
-            pl.BlockSpec((E,), lambda c, m: (c,)),
-            pl.BlockSpec((E,), lambda c, m: (c,)),
-            pl.BlockSpec((B,), lambda c, m: (m[c],)),
+            pl.BlockSpec((E,), lambda c, m, nl: (c,)),
+            pl.BlockSpec((E,), lambda c, m, nl: (c,)),
+            pl.BlockSpec((B,), lambda c, m, nl: (m[c],)),
         ],
-        out_specs=pl.BlockSpec((B,), lambda c, m: (m[c],)),
+        out_specs=pl.BlockSpec((B,), lambda c, m, nl: (m[c],)),
     )
     out = pl.pallas_call(
         _scatter_min_kernel(B, E),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_pad,), L.dtype),
-        input_output_aliases={3: 0},  # L tile accumulates across chunks
+        input_output_aliases={4: 0},  # L tile accumulates across chunks
         interpret=interpret,
-    )(chunk_block, t_pad, v_pad, L_pad)
+    )(chunk_block, live_chunks, t_pad, v_pad, L_pad)
     return out[:n]

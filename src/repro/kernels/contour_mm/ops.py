@@ -24,7 +24,11 @@ Three device backends realise the same MM^h sweep (DESIGN.md §3):
 point inside a single ``lax.while_loop`` — the convergence flag stays on
 device, so there are **zero** per-iteration host syncs (the seed version
 pulled ``bool(converged_early(...))`` across the device boundary every
-iteration).
+iteration).  ``sampling``/``compact_every`` switch it to the work-adaptive
+frontier contraction schedule (``connectivity.frontier``, DESIGN.md §10);
+every sweep accepts an ``edge_limit`` frontier bound, which the blocked
+kernel realises as skipped grid steps via a dead-bin sort plus a
+scalar-prefetched live-chunk count.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.connectivity import frontier as fr
 from repro.connectivity import minmap as lab
 from repro.graphs.structs import Graph
 from repro.kernels.contour_mm.blocked import (_round_up,
@@ -129,6 +134,7 @@ def mm_relax_backend(
     chunk_updates: Optional[int] = None,
     interpret: Optional[bool] = None,
     platform: Optional[str] = None,
+    edge_limit: Optional[jax.Array] = None,
 ) -> jax.Array:
     """One MM^order sweep on the chosen backend (trace-level, not jitted).
 
@@ -138,11 +144,19 @@ def mm_relax_backend(
     lowering from a different host (e.g. ``.lower()``-ing a TPU program on
     a CPU dry-run host).  This is the single entry every layer routes
     sweeps through.
+
+    ``edge_limit`` is the work-adaptive frontier bound (a traced int32
+    scalar): only the first ``edge_limit`` edges contribute updates.  The
+    XLA and scalar-pallas backends mask the suffix to self-loop no-ops
+    (same shapes, so the program stays jit-stable); the blocked kernel
+    routes the suffix's update stream into a dead tail bin and skips those
+    grid steps outright (``blocked.binned_scatter_min_pallas``).
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     n = int(L.shape[0])
-    plan = plan_contour_kernel(n, int(src.shape[0]), platform=platform)
+    m = int(src.shape[0])
+    plan = plan_contour_kernel(n, m, platform=platform)
     if backend == "auto":
         backend = plan.backend
     block_edges = plan.block_edges if block_edges is None else block_edges
@@ -151,7 +165,16 @@ def mm_relax_backend(
                      else chunk_updates)
     interpret = plan.interpret if interpret is None else interpret
 
+    edge_mask = None
+    if edge_limit is not None:
+        edge_mask = jnp.arange(m, dtype=jnp.int32) < edge_limit
+
     if backend == "xla":
+        if edge_mask is not None:
+            # self-loops at vertex 0 are min-mapping no-ops (structs.Graph
+            # padding uses the same trick)
+            src = jnp.where(edge_mask, src, 0)
+            dst = jnp.where(edge_mask, dst, 0)
         return lab.mm_relax(L, src, dst, order)
     if backend == "pallas":
         if order != 2:
@@ -163,14 +186,22 @@ def mm_relax_backend(
                 f"n_vertices={n} exceeds the scalar 'pallas' kernel's "
                 f"whole-L VMEM ceiling ({WHOLE_L_VMEM_CEILING}); use "
                 "'pallas_blocked' (label-tiled, no ceiling) or 'xla'")
+        if edge_mask is not None:
+            src = jnp.where(edge_mask, src, 0)
+            dst = jnp.where(edge_mask, dst, 0)
         src_p, dst_p = _pad_edges(src, dst, block_edges)
         return mm2_pallas(src_p, dst_p, L, block_edges=block_edges,
                           interpret=interpret)
     # pallas_blocked
     t, v = lab.mm_update_stream(L, src, dst, order)
+    valid = None
+    if edge_mask is not None:
+        # the stream is 2*order concatenated [m] segments (targets per
+        # Definition 3); each inherits the per-edge liveness
+        valid = jnp.tile(edge_mask, 2 * order)
     return binned_scatter_min_pallas(
         L, t, v, label_block=label_block, chunk_updates=chunk_updates,
-        interpret=interpret)
+        interpret=interpret, valid=valid)
 
 
 @functools.partial(
@@ -207,7 +238,8 @@ class _FixState(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("backend", "order", "block_edges", "label_block",
-                     "chunk_updates", "interpret", "platform", "max_iters"),
+                     "chunk_updates", "interpret", "platform", "max_iters",
+                     "sampling", "compact_every"),
 )
 def contour_cc_fixpoint(
     graph: Graph,
@@ -220,6 +252,8 @@ def contour_cc_fixpoint(
     interpret: Optional[bool] = None,
     platform: Optional[str] = None,
     max_iters: int = 10_000,
+    sampling: int = 0,
+    compact_every: int = 0,
 ):
     """Iterate the kernel to the connectivity fixed point, fully on device.
 
@@ -228,9 +262,38 @@ def contour_cc_fixpoint(
     the loop condition directly — no per-iteration device→host readback.
     (The jit around this function is itself the proof: a host-side
     ``bool(converged)`` would fail to trace.)  Returns
-    (labels, n_iters, converged) — the loop's own flag, False iff the
-    ``max_iters`` budget ran out.
+    (labels, n_iters, converged, edges_visited) — ``converged`` is the
+    loop's own flag, False iff the ``max_iters`` budget ran out;
+    ``edges_visited`` is a float32 work counter (``n_iters * m`` for the
+    dense schedule).
+
+    ``sampling`` / ``compact_every`` enable the work-adaptive frontier
+    contraction schedule (``connectivity.frontier``): sample-prefix
+    sweeps, the post-sampling largest-component filter, and periodic
+    active-edge contraction — same single while loop, edge arrays and the
+    ``active_m`` count carried as loop state.
     """
+    L0 = jnp.arange(graph.n_vertices, dtype=graph.src.dtype)
+    if sampling < 0 or compact_every < 0:
+        raise ValueError("sampling and compact_every must be >= 0, got "
+                         f"{sampling} / {compact_every}")
+
+    if sampling > 0 or compact_every > 0:
+        def step(L, it, src, dst, limit):
+            del it
+            L = mm_relax_backend(
+                L, src, dst, order=order, backend=backend,
+                block_edges=block_edges, label_block=label_block,
+                chunk_updates=chunk_updates, interpret=interpret,
+                platform=platform, edge_limit=limit)
+            return lab.pointer_jump(L, rounds=1)
+
+        L, it, done, _, visited = fr.adaptive_fixpoint(
+            graph.src, graph.dst, L0, step,
+            n_vertices=graph.n_vertices, sampling=sampling,
+            compact_every=compact_every, max_iters=max_iters)
+        return L, it, done, visited
+
     def cond(s: _FixState):
         return (~s.done) & (s.it < max_iters)
 
@@ -244,9 +307,9 @@ def contour_cc_fixpoint(
         done = lab.converged_early(L, graph.src, graph.dst)
         return _FixState(L=L, it=s.it + 1, done=done)
 
-    L0 = jnp.arange(graph.n_vertices, dtype=graph.src.dtype)
     out = jax.lax.while_loop(
         cond, body, _FixState(L=L0, it=jnp.int32(0), done=jnp.array(False)))
     # Interior vertices of padded/isolated chains may be one hop from the
     # star root (same as connectivity.contour's final compression).
-    return lab.pointer_jump(out.L, rounds=1), out.it, out.done
+    visited = out.it.astype(jnp.float32) * graph.n_edges
+    return lab.pointer_jump(out.L, rounds=1), out.it, out.done, visited

@@ -1,0 +1,243 @@
+"""Work-adaptive edge-frontier contraction (DESIGN.md §10).
+
+The load-bearing property: the sampled/compacted schedule must reach a
+fixed point *bit-identical* to the dense every-edge schedule (which is
+itself oracle-exact) — contraction rewrites edges to representatives, so
+this is a real theorem to defend, not a tautology.  Plus the work
+accounting: ``edges_visited`` strictly below dense ``iterations × m``,
+``active_m`` monotonically non-increasing across compactions.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectivity import SolveOptions, solve, solve_batch
+from repro.connectivity import frontier as fr
+from repro.connectivity import minmap as lab
+from repro.connectivity.contour import contour_labels
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle
+from repro.graphs.structs import Graph, canonicalize_edges
+from repro.kernels.contour_mm.ops import KernelPlan, contour_cc_fixpoint
+
+# A fixed tile plan keeps the blocked-kernel tests off the autotuner and
+# in interpret (CPU validation) mode.
+_BLOCKED_PLAN = KernelPlan(backend="pallas_blocked", label_block=256,
+                           chunk_updates=64, interpret=True)
+
+
+def _graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    s, d = canonicalize_edges(rng.integers(0, n, m), rng.integers(0, n, m), n)
+    if s.shape[0] == 0:
+        s, d = np.array([0]), np.array([0])
+    return Graph.from_numpy(s, d, n)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical fixed point: adaptive vs dense (the uncompacted oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sampling,compact_every", [(0, 1), (0, 2), (2, 0),
+                                                    (2, 2), (3, 1)])
+@pytest.mark.parametrize("variant", ["C-1", "C-2", "C-m"])
+def test_adaptive_bit_identical_to_dense(variant, sampling, compact_every):
+    g = gen.components_mix(
+        [gen.path(240, seed=1), gen.star(150, seed=2), gen.rmat(8, seed=3)],
+        seed=4)
+    oracle = connected_components_oracle(*g.to_numpy())
+    dense = solve(g, variant=variant, backend="xla")
+    adaptive = solve(g, variant=variant, backend="xla",
+                     sampling=sampling, compact_every=compact_every)
+    assert np.array_equal(np.asarray(adaptive.labels),
+                          np.asarray(dense.labels))
+    assert np.array_equal(np.asarray(adaptive.labels), oracle)
+    assert bool(adaptive.converged)
+
+
+def test_adaptive_property_random_graphs():
+    """Hypothesis sweep: compacted == dense == oracle on random graphs."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    # one static shape -> one jit trace per (sampling, compact_every);
+    # hypothesis varies the edge structure inside it
+    n, m = 64, 96
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(0, 3), st.integers(0, 3))
+    def prop(seed, sampling, compact_every):
+        g = _graph(n, m, seed)
+        oracle = connected_components_oracle(*g.to_numpy())
+        adaptive = solve(g, variant="C-2", backend="xla",
+                         sampling=sampling, compact_every=compact_every)
+        assert np.array_equal(np.asarray(adaptive.labels), oracle), (
+            seed, sampling, compact_every)
+
+    prop()
+
+
+def test_adaptive_warm_start_matches_dense():
+    """Warm-started adaptive solve: same fixed point as dense cold/warm."""
+    base = gen.path(300, seed=5)
+    prev = solve(base, variant="C-2")
+    rng = np.random.default_rng(6)
+    grown = base.add_edges(rng.integers(0, 380, 40),
+                           rng.integers(0, 380, 40), n_vertices=380)
+    oracle = connected_components_oracle(*grown.to_numpy())
+    dense = solve(grown, variant="C-2", warm_start=prev)
+    adaptive = solve(grown, variant="C-2", warm_start=prev,
+                     sampling=2, compact_every=1)
+    assert np.array_equal(np.asarray(adaptive.labels),
+                          np.asarray(dense.labels))
+    assert np.array_equal(np.asarray(adaptive.labels), oracle)
+
+
+def test_adaptive_solve_batch_matches_dense():
+    graphs = [gen.path(40, seed=0), gen.rmat(6, seed=1),
+              gen.star(30, seed=2)]
+    dense = solve_batch(graphs, variant="C-2")
+    adaptive = solve_batch(graphs, variant="C-2", sampling=2,
+                           compact_every=1)
+    assert np.array_equal(np.asarray(adaptive.labels),
+                          np.asarray(dense.labels))
+    for r, g in zip(adaptive.unstack(), graphs):
+        oracle = connected_components_oracle(*g.to_numpy())
+        assert np.array_equal(np.asarray(r.labels), oracle)
+
+
+def test_adaptive_blocked_interpret_backend():
+    """The frontier limit threads into the blocked kernel's dead-bin path
+    (interpret mode here; on TPU the same path skips whole grid steps)."""
+    g = gen.components_mix([gen.path(200, seed=7), gen.rmat(8, seed=8)],
+                           seed=9)
+    oracle = connected_components_oracle(*g.to_numpy())
+    r = solve(g, variant="C-2", backend="pallas_blocked",
+              plan=_BLOCKED_PLAN, sampling=2, compact_every=2)
+    assert np.array_equal(np.asarray(r.labels), oracle)
+    assert float(r.edges_visited) < int(r.iterations) * g.n_edges
+
+
+def test_adaptive_kernel_fixpoint_matches_classic():
+    """`contour_cc_fixpoint` under the adaptive schedule (the C-2-blk
+    bench path) reaches the classic path's exact labels."""
+    g = gen.components_mix([gen.path(300, seed=1), gen.star(200, seed=2)],
+                           seed=3)
+    classic, it_c, ok_c, visited_c = contour_cc_fixpoint(g, backend="xla")
+    adaptive, it_a, ok_a, visited_a = contour_cc_fixpoint(
+        g, backend="xla", sampling=2, compact_every=2)
+    assert bool(ok_c) and bool(ok_a)
+    assert np.array_equal(np.asarray(adaptive), np.asarray(classic))
+    assert float(visited_c) == float(it_c) * g.n_edges
+    assert float(visited_a) < float(it_a) * g.n_edges
+
+
+# ---------------------------------------------------------------------------
+# work accounting
+# ---------------------------------------------------------------------------
+
+
+def test_edges_visited_dense_vs_compacted():
+    g = gen.path(4096, seed=11)
+    dense = solve(g, variant="C-2", backend="xla")
+    assert float(dense.edges_visited) == int(dense.iterations) * g.n_edges
+    adaptive = solve(g, variant="C-2", backend="xla", sampling=2,
+                     compact_every=1)
+    assert float(adaptive.edges_visited) < int(adaptive.iterations) * g.n_edges
+    assert float(adaptive.edges_visited) > 0
+
+
+def test_active_m_monotone_across_compactions():
+    """`contract_edges` can only retire edges: active_m never grows,
+    whatever the interleaving of sweeps and label movement."""
+    g = gen.components_mix([gen.path(120, seed=1), gen.rmat(7, seed=2)],
+                           seed=3)
+    L = jnp.arange(g.n_vertices, dtype=jnp.int32)
+    src, dst = g.src, g.dst
+    active_m = jnp.int32(g.n_edges)
+    counts = [int(active_m)]
+    for it in range(8):
+        L = lab.mm_relax(L, src, dst, order=2)
+        L = lab.pointer_jump(L, rounds=1)
+        if it == 1:  # the one largest-component filter pass
+            c_hat = fr.largest_component_label(L, g.n_vertices)
+            src, dst, active_m = fr.contract_edges(L, src, dst, active_m,
+                                                   only_label=c_hat)
+        else:
+            src, dst, active_m = fr.contract_edges(L, src, dst, active_m)
+        counts.append(int(active_m))
+    assert counts == sorted(counts, reverse=True)
+    assert counts[-1] < counts[0]          # work actually shrank
+    # retired suffix means the prefix layout is preserved for the live set
+    assert int(active_m) >= 0
+
+
+def test_largest_component_label_is_mode():
+    L = jnp.asarray([0, 0, 0, 3, 3, 5], jnp.int32)
+    assert int(fr.largest_component_label(L, 6)) == 0
+
+
+def test_sample_prefix_m_floor():
+    assert fr.sample_prefix_m(1) == 1
+    assert fr.sample_prefix_m(3) == 1
+    assert fr.sample_prefix_m(4096) == 1024
+
+
+# ---------------------------------------------------------------------------
+# schedule plumbing / guards
+# ---------------------------------------------------------------------------
+
+
+def test_c_syn_rejects_adaptive_schedule():
+    g = gen.path(50, seed=0)
+    with pytest.raises(ValueError, match="C-Syn"):
+        solve(g, variant="C-Syn", sampling=2)
+    with pytest.raises(ValueError, match="C-Syn"):
+        contour_labels(g.src, g.dst, g.n_vertices, variant="C-Syn",
+                       compact_every=1)
+
+
+def test_adaptive_loop_stays_on_device():
+    """The adaptive schedule must lower to on-device while loops — edge
+    arrays, active_m, and the convergence flag are all loop state; any
+    host-side compaction would fail to trace under this jit."""
+    g = gen.rmat(8, seed=13)
+    txt = contour_labels.lower(
+        g.src, g.dst, g.n_vertices, variant="C-2", sampling=2,
+        compact_every=2).as_text()
+    assert "while" in txt
+
+
+def test_solve_options_validate_rejects_negative_counts():
+    g = gen.path(20, seed=0)
+    for field in ("warmup", "async_compress", "sampling", "compact_every"):
+        with pytest.raises(ValueError, match=field):
+            SolveOptions(**{field: -1}).validate()
+        with pytest.raises(ValueError, match=field):
+            solve(g, **{field: -1})
+    # zero stays legal for all four
+    SolveOptions(warmup=0, async_compress=0, sampling=0,
+                 compact_every=0).validate()
+
+
+def test_distributed_adaptive_single_device_mesh():
+    """Per-shard contraction on the degenerate 1-device mesh (the
+    multi-device case runs in test_distributed's subprocess tier)."""
+    from repro import jax_compat
+    from repro.connectivity.distributed import distributed_contour
+
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+    g = gen.components_mix([gen.path(300, seed=1), gen.rmat(8, seed=2)],
+                           seed=3)
+    oracle = connected_components_oracle(*g.to_numpy())
+    dense_L, _, _, dense_v = distributed_contour(g, mesh,
+                                                 edge_axes=("data",))
+    L, rounds, ok, visited = distributed_contour(
+        g, mesh, edge_axes=("data",), sampling=2, compact_every=2)
+    assert bool(ok)
+    assert np.array_equal(np.asarray(L), np.asarray(dense_L))
+    assert np.array_equal(np.asarray(L), oracle)
+    assert float(visited) < float(dense_v) or int(rounds) < 3

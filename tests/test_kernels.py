@@ -36,8 +36,10 @@ def test_contour_mm_fixpoint_matches_oracle():
 
     g = gen.components_mix(
         [gen.path(300, seed=1), gen.star(200, seed=2)], seed=3)
-    labels, iters, converged = contour_cc_fixpoint(g, backend="pallas")
+    labels, iters, converged, visited = contour_cc_fixpoint(g,
+                                                            backend="pallas")
     assert bool(converged)
+    assert float(visited) == float(iters) * g.n_edges
     oracle = connected_components_oracle(*g.to_numpy())
     assert (np.asarray(labels) == oracle).all()
     assert iters < 30
@@ -103,7 +105,7 @@ def test_blocked_fixpoint_matches_oracle_multiblock():
         [gen.path(900, seed=1), gen.star(700, seed=2), gen.rmat(10, seed=3)],
         seed=4)
     assert g.n_vertices >= 4 * 512
-    labels, iters, converged = contour_cc_fixpoint(
+    labels, iters, converged, _ = contour_cc_fixpoint(
         g, backend="pallas_blocked", label_block=512, chunk_updates=128)
     assert bool(converged)
     oracle = connected_components_oracle(*g.to_numpy())
@@ -121,7 +123,7 @@ def test_fixpoint_runs_on_device_without_host_sync():
     g = gen.rmat(9, seed=11)
     txt = contour_cc_fixpoint.lower(g, backend="xla").as_text()
     assert "while" in txt
-    labels, iters, _ = contour_cc_fixpoint(g, backend="xla")
+    labels, iters, _, _ = contour_cc_fixpoint(g, backend="xla")
     oracle = connected_components_oracle(*g.to_numpy())
     assert (np.asarray(labels) == oracle).all()
 
@@ -134,7 +136,7 @@ def test_fixpoint_backends_agree():
                            seed=3)
     oracle = connected_components_oracle(*g.to_numpy())
     for backend in ("xla", "auto", "pallas", "pallas_blocked"):
-        labels, iters, _ = contour_cc_fixpoint(
+        labels, iters, _, _ = contour_cc_fixpoint(
             g, backend=backend, label_block=256, chunk_updates=64)
         assert (np.asarray(labels) == oracle).all(), backend
         assert int(iters) < 30, backend

@@ -171,7 +171,8 @@ def test_component_result_is_a_pytree():
     g = GRAPHS["path"]()
     result = solve(g)
     leaves, treedef = jax.tree_util.tree_flatten(result)
-    assert len(leaves) == 3
+    # labels, iterations, converged, edges_visited (the work counter)
+    assert len(leaves) == 4
     rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
     assert (np.asarray(rebuilt.labels) == np.asarray(result.labels)).all()
     # flows through jit
@@ -218,6 +219,46 @@ def test_stack_graphs_pads_with_self_loops():
     pad_s = np.asarray(batched.src[0, g1.n_edges:])
     pad_d = np.asarray(batched.dst[0, g1.n_edges:])
     assert (pad_s == pad_d).all()
+
+
+def test_prebatched_solve_trims_padding_with_batch_sizes():
+    """Regression (ISSUE 3): a pre-batched Graph solve used to record the
+    padded n_vertices for every graph, so unstack() could not trim the
+    padding vertices — batch_sizes= carries the true per-graph counts."""
+    graphs = [gen.path(10, seed=0), gen.path(50, seed=1),
+              gen.rmat(5, seed=2)]
+    batched, sizes = stack_graphs(graphs, with_sizes=True)
+    assert sizes == tuple(g.n_vertices for g in graphs)
+
+    batch = solve_batch(batched, batch_sizes=sizes)
+    parts = batch.unstack()
+    for part, g in zip(parts, graphs):
+        oracle = connected_components_oracle(*g.to_numpy())
+        assert part.labels.shape[0] == g.n_vertices     # padding trimmed
+        assert (np.asarray(part.labels) == oracle).all()
+        assert part.n_components == len(np.unique(oracle))
+
+    # parity with the sequence form (which records sizes itself)
+    from_seq = solve_batch(graphs)
+    for a, b in zip(parts, from_seq.unstack()):
+        assert (np.asarray(a.labels) == np.asarray(b.labels)).all()
+
+    # without batch_sizes the padded singletons leak into the counts —
+    # the documented (pre-fix) behaviour stays available but explicit
+    untrimmed = solve_batch(batched).unstack()
+    assert untrimmed[0].labels.shape[0] == batched.n_vertices
+    assert untrimmed[0].n_components > parts[0].n_components
+
+
+def test_solve_batch_batch_sizes_validation():
+    graphs = [gen.path(10, seed=0), gen.path(20, seed=1)]
+    batched, sizes = stack_graphs(graphs, with_sizes=True)
+    with pytest.raises(ValueError, match="entries"):
+        solve_batch(batched, batch_sizes=(10,))
+    with pytest.raises(ValueError, match="outside"):
+        solve_batch(batched, batch_sizes=(10, 999))
+    with pytest.raises(ValueError, match="outside"):
+        solve_batch(batched, batch_sizes=(0, 20))
 
 
 def test_solve_batch_rejects_mesh_and_distributed():

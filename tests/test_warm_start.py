@@ -43,6 +43,47 @@ def test_warm_start_matches_from_scratch_oracle(kind, algorithm):
     assert (np.asarray(warm.labels) <= np.asarray(prev.labels)).all()
 
 
+def test_negative_warm_start_labels_raise():
+    """Regression (ISSUE 3): a negative warm-start label survives the
+    min(init, iota) clamp, and XLA gather then silently clamps the index
+    to 0 — merging every poisoned vertex into component 0.  Both the
+    canonical validator and the solve() facade must refuse eagerly."""
+    from repro.connectivity import minmap
+
+    g = gen.path(40, seed=0)
+    bad = np.arange(g.n_vertices, dtype=np.int32)
+    bad[7] = -3
+    with pytest.raises(ValueError, match=">= 0"):
+        minmap.resolve_init_labels(bad, g.n_vertices, np.int32)
+    with pytest.raises(ValueError, match=">= 0"):
+        solve(g, warm_start=bad)
+    with pytest.raises(ValueError, match=">= 0"):
+        solve_batch([g, g], warm_start=[bad, bad])
+    # the all -1 labelling is the classic "uninitialised" poison
+    with pytest.raises(ValueError, match=">= 0"):
+        solve(g, warm_start=np.full(g.n_vertices, -1, np.int32))
+
+
+def test_negative_warm_start_neutralised_under_trace():
+    """Inside a user jax.jit the labels are tracers, so the eager check
+    cannot fire — negatives must be neutralised to identity labels (a
+    valid cold start) instead of being gather-clamped to vertex 0."""
+    import jax
+    import jax.numpy as jnp
+
+    g = gen.components_mix([gen.path(30, seed=1), gen.star(20, seed=2)],
+                           seed=3)
+    oracle = connected_components_oracle(*g.to_numpy())
+    bad = jnp.arange(g.n_vertices, dtype=jnp.int32).at[7].set(-5)
+
+    @jax.jit
+    def solve_traced(ws):
+        return solve(g, warm_start=ws).labels
+
+    labels = solve_traced(bad)
+    assert (np.asarray(labels) == oracle).all()
+
+
 @pytest.mark.parametrize("kind", ("components_mix", "rmat"))
 def test_warm_start_accepts_raw_label_arrays(kind):
     base, grown = _base_and_grown(kind, seed=23)
