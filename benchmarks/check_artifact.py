@@ -14,7 +14,11 @@ Fails (exit 1) when:
   (the noise-free form of the "no slower" gate, DESIGN.md §6);
 * the frontier gate regressed — the work-adaptive ``C-2-cmp`` schedule
   must visit strictly fewer edges than dense ``iterations × m`` on every
-  suite graph while reaching a bit-identical fixed point (DESIGN.md §10).
+  suite graph while reaching a bit-identical fixed point (DESIGN.md §10);
+* the streaming gate regressed (schema 3) — a 64-micro-batch shuffled
+  stream through ``StreamingConnectivity`` must land bit-identical to the
+  one-shot solve with cumulative ``edges_visited`` under 2x the dense
+  sweep on every suite graph (DESIGN.md §11).
 
 Stdlib-only on purpose: the gate must run before (or without) the package
 environment, e.g. as a bare CI step.
@@ -50,6 +54,15 @@ def check(payload: dict) -> list:
     if "frontier_visits_fewer_edges" not in summary and \
             int(payload.get("schema", 0)) >= 2:
         errors.append("schema >= 2 artifact is missing the frontier gate")
+    for key, field in (("streaming_bit_identical", "bit_identical"),
+                       ("streaming_visits_lt_2x_dense", "lt_2x_dense")):
+        if key in summary and not summary[key]:
+            bad = [g for g, row in payload.get("streaming_gate", {}).items()
+                   if not row.get(field)]
+            errors.append(f"{key} regressed (graphs: {bad})")
+    if "streaming_bit_identical" not in summary and \
+            int(payload.get("schema", 0)) >= 3:
+        errors.append("schema >= 3 artifact is missing the streaming gate")
     return errors
 
 
@@ -67,7 +80,9 @@ def main(argv) -> int:
           f"(schema {payload.get('schema')}, {summary.get('n_graphs')} "
           f"graphs, all_correct={summary.get('all_correct')}, "
           f"frontier_visits_fewer_edges="
-          f"{summary.get('frontier_visits_fewer_edges')})")
+          f"{summary.get('frontier_visits_fewer_edges')}, "
+          f"streaming_bit_identical="
+          f"{summary.get('streaming_bit_identical')})")
     return 0
 
 

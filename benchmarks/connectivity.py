@@ -270,12 +270,14 @@ def frontier_gate(records: List[Record]) -> Dict[str, Dict[str, float]]:
 
 
 def records_to_json(records: List[Record], fast: bool = False,
-                    gate: Optional[Dict[str, Dict[str, float]]] = None) -> Dict:
+                    gate: Optional[Dict[str, Dict[str, float]]] = None,
+                    streaming: Optional[Dict[str, Dict[str, float]]] = None,
+                    ) -> Dict:
     """Machine-readable benchmark artifact (``BENCH_connectivity.json``).
 
     One entry per (graph, method) with time/iterations (plus the
     ``edges_visited`` work counter where the solver reports one — schema 2
-    addition), and a summary with two gates:
+    addition), and a summary with three gates:
 
     * the kernel-subsystem gate comparing ``C-2-blk`` (dispatched backend +
       on-device fixpoint) against the seed XLA scatter-min path (``C-2``).
@@ -284,7 +286,12 @@ def records_to_json(records: List[Record], fast: bool = False,
       falls back to the figure-suite times;
     * the frontier gate (:func:`frontier_gate`): the work-adaptive
       ``C-2-cmp`` row must visit strictly fewer edges than dense
-      ``iterations × m`` with a bit-identical fixed point, per graph.
+      ``iterations × m`` with a bit-identical fixed point, per graph;
+    * the streaming gate (``benchmarks.streaming.run_gate`` — schema 3
+      addition): a 64-micro-batch shuffled stream must land bit-identical
+      to the one-shot solve with cumulative ``edges_visited`` under 2x
+      the dense sweep.  The artifact stays schema 2 when ``streaming`` is
+      not supplied.
     """
     times = pivot(records, "time_s")
     if gate:
@@ -312,13 +319,17 @@ def records_to_json(records: List[Record], fast: bool = False,
         # computed False is a regression
         summary["frontier_bit_identical"] = all(
             row["bit_identical"] is not False for row in frontier.values())
+    if streaming:
+        from benchmarks.streaming import summarise as _stream_summary
+        summary.update(_stream_summary(streaming))
     return {
-        "schema": 2,
+        "schema": 3 if streaming else 2,
         "suite": "paper_connectivity",
         "fast": fast,
         "summary": summary,
         "blocked_gate": gate or {},
         "frontier_gate": frontier,
+        "streaming_gate": streaming or {},
         "records": [dataclasses.asdict(r) for r in records],
     }
 

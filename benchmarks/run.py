@@ -34,6 +34,7 @@ from benchmarks import (
     fig4_speedup_connectit,
     roofline_report,
     scaling_delaunay,
+    streaming,
 )
 
 SECTIONS = [
@@ -44,6 +45,7 @@ SECTIONS = [
     ("delaunay_scaling", scaling_delaunay.main),
     ("distributed_contour", distributed_scaling.main),
     ("dedup_integration", dedup_bench.main),
+    ("streaming_vs_scratch", streaming.main),
     ("roofline_report", roofline_report.main),
 ]
 
@@ -80,8 +82,10 @@ def main() -> None:
         try:
             records = connectivity.run_suite(fast=args.fast)
             gate = connectivity.blocked_vs_xla_gate(fast=args.fast)
+            stream_gate = streaming.run_gate(fast=args.fast)
             payload = connectivity.records_to_json(records, fast=args.fast,
-                                                   gate=gate)
+                                                   gate=gate,
+                                                   streaming=stream_gate)
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=2)
             print(f"\nwrote {args.json}: {payload['summary']}")

@@ -15,6 +15,7 @@ from repro.connectivity import (
     ComponentResult,
     Graph,
     SolveOptions,
+    StreamingConnectivity,
     list_solvers,
     register_solver,
     solve,
@@ -26,6 +27,7 @@ __all__ = [
     "ComponentResult",
     "Graph",
     "SolveOptions",
+    "StreamingConnectivity",
     "list_solvers",
     "register_solver",
     "solve",

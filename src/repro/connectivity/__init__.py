@@ -19,6 +19,13 @@ Batched multi-graph::
     batch = solve_batch([g1, g2, g3])
     for r in batch.unstack(): ...
 
+Streaming (edge micro-batches, per-batch work tracks the delta)::
+
+    eng = StreamingConnectivity(n_vertices=n)
+    eng.ingest(src_batch, dst_batch)
+    eng.same_component(u, v)            # O(1), no re-solve
+    final = eng.snapshot()
+
 The old per-algorithm entry points in ``repro.core`` remain as deprecation
 shims; new code should import from here (or ``from repro import solve``).
 """
@@ -35,6 +42,7 @@ from repro.connectivity import solvers as _solvers  # registers the families
 from repro.connectivity.solve import solve
 from repro.connectivity.batch import solve_batch, stack_graphs
 from repro.connectivity.contour import VARIANTS
+from repro.connectivity.streaming import StreamingConnectivity
 from repro.graphs.structs import Graph
 
 __all__ = [
@@ -42,6 +50,7 @@ __all__ = [
     "Graph",
     "SolveOptions",
     "SolverSpec",
+    "StreamingConnectivity",
     "VARIANTS",
     "get_solver",
     "list_solvers",

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from repro.connectivity import minmap
 from repro.connectivity.options import SolveOptions
 from repro.connectivity.result import ComponentResult
-from repro.connectivity.solve import _resolve, resolve_warm_start, \
-    solver_output
+from repro.connectivity.solve import _resolve, make_result, \
+    resolve_warm_start, solver_output
 from repro.graphs.structs import Graph
 
 
@@ -37,10 +37,17 @@ def stack_graphs(graphs: Sequence[Graph], with_sizes: bool = False):
     without them ``ComponentResult.unstack()`` on a pre-batched solve has
     no way to trim the padding vertices back off; thread them into
     ``solve_batch(..., batch_sizes=sizes)``.
+
+    An empty sequence stacks to a ``B=0`` graph (one padding vertex, one
+    padding edge slot) — ``solve_batch`` on it returns an empty batched
+    result whose ``unstack()`` is ``[]``, so fleet pipelines need no
+    special case for an empty shard.
     """
     graphs = list(graphs)
     if not graphs:
-        raise ValueError("stack_graphs needs at least one graph")
+        empty = jnp.zeros((0, 1), jnp.int32)
+        stacked = Graph(src=empty, dst=empty, n_vertices=1)
+        return (stacked, ()) if with_sizes else stacked
     n = max(g.n_vertices for g in graphs)
     m = max(max(g.n_edges for g in graphs), 1)
     padded = [g.pad_edges(m) for g in graphs]
@@ -96,7 +103,7 @@ def _stack_warm_starts(warm_start, graphs: List[Graph], n: int):
         row = resolve_warm_start(w, g.n_vertices)
         row = minmap.resolve_init_labels(row, n, jnp.int32)
         rows.append(row)
-    return jnp.stack(rows)
+    return jnp.stack(rows) if rows else None
 
 
 def solve_batch(
@@ -155,6 +162,17 @@ def solve_batch(
         batched = stack_graphs(per_graph)
     n = batched.n_vertices
 
+    if not per_graph:
+        # empty fleet: nothing to trace (vmap over B=0 and the host loop
+        # both degenerate); unstack() of the result is [].  A mismatched
+        # warm_start still surfaces the caller's slicing bug instead of
+        # being silently ignored.
+        _stack_warm_starts(warm_start, per_graph, n)
+        return make_result(labels=jnp.zeros((0, n), jnp.int32),
+                           iterations=jnp.zeros((0,), jnp.int32),
+                           converged=jnp.zeros((0,), bool),
+                           batch_sizes=())
+
     init_b = _stack_warm_starts(warm_start, per_graph, n)
     if init_b is not None and not spec.supports_warm_start:
         raise ValueError(f"solver {spec.name!r} does not support warm "
@@ -192,10 +210,5 @@ def solve_batch(
         raise ValueError(
             f"solver {spec.name!r} does not support batched solving")
 
-    return ComponentResult(labels=labels,
-                           iterations=jnp.asarray(iterations, jnp.int32),
-                           converged=jnp.asarray(converged, bool),
-                           batch_sizes=sizes,
-                           edges_visited=(
-                               None if edges_visited is None
-                               else jnp.asarray(edges_visited, jnp.float32)))
+    return make_result(labels, iterations, converged, edges_visited,
+                       batch_sizes=sizes)

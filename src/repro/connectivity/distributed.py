@@ -71,45 +71,51 @@ def _round_up(x: int, k: int) -> int:
     return (x + k - 1) // k * k
 
 
-def distributed_contour(
-    graph: Graph,
-    mesh: jax.sharding.Mesh,
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "edge_axes", "local_rounds", "max_iters",
+                     "async_compress", "backend", "sampling",
+                     "compact_every"),
+)
+def _distributed_fixpoint(
+    src: jax.Array,
+    dst: jax.Array,
+    L0: jax.Array,
+    n_active: jax.Array,
     *,
-    edge_axes: Sequence[str] = ("data",),
-    local_rounds: int = 1,
-    max_iters: int = 10_000,
-    async_compress: int = 1,
-    backend: str = "xla",
-    init_labels: Optional[jax.Array] = None,
-    sampling: int = 0,
-    compact_every: int = 0,
+    mesh: jax.sharding.Mesh,
+    edge_axes: tuple,
+    local_rounds: int,
+    max_iters: int,
+    async_compress: int,
+    backend: str,
+    sampling: int,
+    compact_every: int,
 ):
-    """Run Contour C-2 with edges sharded over ``edge_axes`` of ``mesh``.
+    """Module-level jitted core of :func:`distributed_contour`.
 
-    Returns ``(labels, n_global_rounds, converged, edges_visited)``.
-    Works on any mesh whose
-    ``edge_axes`` product divides the (padded) edge count — the production
-    meshes in ``repro.launch.mesh`` and the multi-device CPU test mesh
-    alike.  ``backend`` selects the per-shard sweep realisation through
-    the shared ``kernels.contour_mm`` dispatch layer ("xla" scatter-min by
-    default; "pallas_blocked"/"auto" for the label-blocked TPU kernel).
+    Module-level so the jit cache survives across calls: a streaming
+    engine re-invoking the mesh path per micro-batch (same shapes, same
+    statics) compiles once, not once per batch.  ``n_active`` is the real
+    (pre-padding) edge count; padding is never counted in
+    ``edges_visited`` on either schedule — the dense branch scales its
+    ``iterations x m`` count by it, the adaptive branch clamps each
+    shard's initial live prefix to its slice of it (matching the
+    single-device ``active_m0`` path).
     """
-    if sampling < 0 or compact_every < 0:
-        raise ValueError("sampling and compact_every must be >= 0, got "
-                         f"{sampling} / {compact_every}")
-    n_shards = 1
-    for a in edge_axes:
-        n_shards *= mesh.shape[a]
-    g = graph.pad_edges(_round_up(max(graph.n_edges, n_shards), n_shards))
-    n = g.n_vertices
-    m_loc = g.n_edges // n_shards
     axis = tuple(edge_axes)
+    n_shards = 1
+    for a in axis:
+        n_shards *= mesh.shape[a]
+    m = src.shape[0]
+    n = L0.shape[0]
+    m_loc = m // n_shards
     adaptive = sampling > 0 or compact_every > 0
 
     edge_spec = P(axis if len(axis) > 1 else axis[0])
     lbl_spec = P()  # replicated
 
-    def body(src_in, dst_in, L0):
+    def body(src_in, dst_in, L0, n_act):
         def relax_rounds(L, src_loc, dst_loc, limit):
             for _ in range(local_rounds):
                 L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
@@ -134,10 +140,23 @@ def distributed_contour(
             out = jax.lax.while_loop(
                 cond, step,
                 _State(L=L0, it=jnp.int32(0), done=jnp.array(False)))
-            visited = out.it.astype(jnp.float32) * (local_rounds * g.n_edges)
+            # dense sweeps physically touch the whole padded array (the
+            # self-loops are no-ops), but the counter reports real edges
+            # only — same contract as the adaptive branch
+            visited = (out.it.astype(jnp.float32) * local_rounds
+                       * n_act.astype(jnp.float32))
             return out.L, out.it, out.done, visited
 
         sample_m = jnp.int32(fr.sample_prefix_m(m_loc))
+
+        # this shard's slice of the real-edge prefix: the global layout is
+        # [real | padding] and P(axis) block-shards contiguously with the
+        # first axis major, so shard i holds [i*m_loc, (i+1)*m_loc)
+        shard_idx = jnp.int32(0)
+        for a in axis:
+            shard_idx = shard_idx * mesh.shape[a] + jax.lax.axis_index(a)
+        active0 = jnp.clip(n_act - shard_idx * m_loc, 0,
+                           m_loc).astype(jnp.int32)
 
         def cond(s: _FrontierShardState):
             return (~s.done) & (s.it < max_iters)
@@ -166,24 +185,73 @@ def distributed_contour(
             cond, step,
             _FrontierShardState(L=L0, it=jnp.int32(0), done=jnp.array(False),
                                 src=src_in, dst=dst_in,
-                                active_m=jnp.int32(m_loc),
+                                active_m=active0,
                                 visited=jnp.float32(0)))
         return fr.compress_full(out.L), out.it, out.done, out.visited
 
-    mapped = jax_compat.shard_map(
+    return jax_compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(edge_spec, edge_spec, lbl_spec),
+        in_specs=(edge_spec, edge_spec, lbl_spec, lbl_spec),
         out_specs=(lbl_spec, lbl_spec, lbl_spec, lbl_spec),
-    )
+    )(src, dst, L0, n_active)
+
+
+def distributed_contour(
+    graph: Graph,
+    mesh: jax.sharding.Mesh,
+    *,
+    edge_axes: Sequence[str] = ("data",),
+    local_rounds: int = 1,
+    max_iters: int = 10_000,
+    async_compress: int = 1,
+    backend: str = "xla",
+    init_labels: Optional[jax.Array] = None,
+    sampling: int = 0,
+    compact_every: int = 0,
+    n_active: Optional[int] = None,
+):
+    """Run Contour C-2 with edges sharded over ``edge_axes`` of ``mesh``.
+
+    Returns ``(labels, n_global_rounds, converged, edges_visited)``.
+    Works on any mesh whose
+    ``edge_axes`` product divides the (padded) edge count — the production
+    meshes in ``repro.launch.mesh`` and the multi-device CPU test mesh
+    alike.  ``backend`` selects the per-shard sweep realisation through
+    the shared ``kernels.contour_mm`` dispatch layer ("xla" scatter-min by
+    default; "pallas_blocked"/"auto" for the label-blocked TPU kernel).
+
+    ``n_active`` overrides the real-edge count when the caller's graph is
+    itself already padded with trailing self-loops (the streaming engine's
+    pow2 buckets): edges past it are born retired in the adaptive
+    schedule and never counted in ``edges_visited``.
+    """
+    if sampling < 0 or compact_every < 0:
+        raise ValueError("sampling and compact_every must be >= 0, got "
+                         f"{sampling} / {compact_every}")
+    if n_active is None:
+        n_active = graph.n_edges
+    elif not 0 <= n_active <= graph.n_edges:
+        raise ValueError(f"n_active={n_active} outside [0, "
+                         f"{graph.n_edges}]")
+    n_shards = 1
+    for a in edge_axes:
+        n_shards *= mesh.shape[a]
+    g = graph.pad_edges(_round_up(max(graph.n_edges, n_shards), n_shards))
+    axis = tuple(edge_axes)
+    edge_spec = P(axis if len(axis) > 1 else axis[0])
+    lbl_spec = P()
 
     src = jax.device_put(g.src, NamedSharding(mesh, edge_spec))
     dst = jax.device_put(g.dst, NamedSharding(mesh, edge_spec))
     L0 = jax.device_put(
-        lab.resolve_init_labels(init_labels, n, g.src.dtype),
+        lab.resolve_init_labels(init_labels, g.n_vertices, g.src.dtype),
         NamedSharding(mesh, lbl_spec))
-    L, it, done, visited = jax.jit(mapped)(src, dst, L0)
-    return L, it, done, visited
+    return _distributed_fixpoint(
+        src, dst, L0, jnp.int32(n_active),
+        mesh=mesh, edge_axes=axis, local_rounds=local_rounds,
+        max_iters=max_iters, async_compress=async_compress, backend=backend,
+        sampling=sampling, compact_every=compact_every)
 
 
 @functools.partial(

@@ -241,6 +241,7 @@ def adaptive_fixpoint(
     sampling: int,
     compact_every: int,
     max_iters: int,
+    active_m0: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Run ``step`` to the connectivity fixed point, work-adaptively.
 
@@ -255,6 +256,12 @@ def adaptive_fixpoint(
       compact_every: contraction cadence in iterations (static; 0 = only
         the post-sampling largest-component filter, if any).
       max_iters: iteration budget (static).
+      active_m0: initial live-prefix count (traced int32 scalar; default
+        the full ``m``).  Callers passing fewer assert the suffix is
+        already intra-component under ``L0`` — e.g. self-loop padding, or
+        the streaming engine's pre-retired padded tail
+        (``connectivity.streaming``) — so it is never swept *and never
+        counted* in ``edges_visited``.
 
     Returns:
       ``(labels, iterations, converged, active_m, edges_visited)``.
@@ -287,7 +294,8 @@ def adaptive_fixpoint(
         done=jnp.array(False),
         src=src,
         dst=dst,
-        active_m=jnp.int32(m),
+        active_m=(jnp.int32(m) if active_m0 is None
+                  else jnp.asarray(active_m0, jnp.int32)),
         visited=jnp.float32(0),
     )
     out = jax.lax.while_loop(cond, body, init)

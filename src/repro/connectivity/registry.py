@@ -40,6 +40,12 @@ class SolverSpec:
     supports_warm_start: bool = True
     supports_batch: bool = True          # solvable under jax.vmap
     supports_mesh: bool = False          # runs on a Mesh via shard_map
+    # delta-resweep safe: starting from a star-forest fixed point, sweeping
+    # only newly ingested edges (rewritten to their endpoints' current
+    # roots) reaches the full graph's fixed point.  A min-mapping property
+    # — see connectivity.streaming / DESIGN.md §11 — so only the Contour
+    # families set it.
+    supports_streaming: bool = False
     runs_on: str = "device"              # "device" | "host"
     paper_ref: str = ""                  # paper section this reproduces
 

@@ -92,12 +92,36 @@ class ComponentResult:
         """Vertex count per component, indexed like :meth:`compact_labels`."""
         return self._uniq[2]
 
+    @staticmethod
+    def _check_ids(*ids):
+        # NumPy would silently wrap negative ids to the array tail — the
+        # same silently-wrong-component failure mode the negative
+        # warm-start validation exists for (out-of-range positives raise
+        # on their own)
+        for v in ids:
+            if np.any(np.asarray(v) < 0):
+                raise IndexError("vertex ids must be >= 0")
+
     def same_component(self, u, v):
         """True iff ``u`` and ``v`` are connected (vectorises over arrays)."""
         self._require_single("same_component")
+        self._check_ids(u, v)
         L = self._np_labels
         out = L[np.asarray(u)] == L[np.asarray(v)]
         return bool(out) if np.ndim(out) == 0 else out
+
+    def component_of(self, v):
+        """Component id (the component's min vertex id) of ``v``.
+
+        Vectorises over arrays; the id is directly comparable across
+        queries of the same result (and across snapshots of a
+        ``StreamingConnectivity`` stream *until* a later batch merges the
+        component into one with a smaller minimum).
+        """
+        self._require_single("component_of")
+        self._check_ids(v)
+        out = self._np_labels[np.asarray(v)]
+        return int(out) if np.ndim(out) == 0 else out
 
     # -- batched results -------------------------------------------------
     def unstack(self) -> List["ComponentResult"]:

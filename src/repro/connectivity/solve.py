@@ -80,6 +80,24 @@ def solver_output(out):
     return labels, iterations, converged, edges_visited
 
 
+def make_result(labels, iterations, converged, edges_visited=None,
+                batch_sizes=None) -> ComponentResult:
+    """Canonical dtype normalisation into a :class:`ComponentResult`.
+
+    The single constructor funnel for ``solve``, ``solve_batch`` and the
+    streaming engine's ``snapshot()``, so the result dtypes (int32
+    iterations, bool converged, float32 work counter) cannot drift between
+    entry points.
+    """
+    return ComponentResult(
+        labels=labels,
+        iterations=jnp.asarray(iterations, jnp.int32),
+        converged=jnp.asarray(converged, bool),
+        batch_sizes=batch_sizes,
+        edges_visited=(None if edges_visited is None
+                       else jnp.asarray(edges_visited, jnp.float32)))
+
+
 def _resolve(options: Optional[SolveOptions],
              overrides) -> tuple[SolveOptions, SolverSpec]:
     """Validate options and pick the solver (mesh-aware)."""
@@ -143,9 +161,4 @@ def solve(
                          "starts")
     labels, iterations, converged, edges_visited = solver_output(
         spec.fn(graph, opts, init))
-    return ComponentResult(labels=labels,
-                           iterations=jnp.asarray(iterations, jnp.int32),
-                           converged=jnp.asarray(converged, bool),
-                           edges_visited=(
-                               None if edges_visited is None
-                               else jnp.asarray(edges_visited, jnp.float32)))
+    return make_result(labels, iterations, converged, edges_visited)

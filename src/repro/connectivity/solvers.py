@@ -98,6 +98,7 @@ CONTOUR = register_solver(SolverSpec(
     default_variant="C-2",
     default_max_iters=100_000,
     supports_mesh=True,          # via automatic routing to 'distributed'
+    supports_streaming=True,     # any async variant (C-Syn rejected)
     paper_ref="§III-B (Alg. 1, variants §III-B4)",
 ))
 
@@ -110,6 +111,7 @@ DISTRIBUTED = register_solver(SolverSpec(
     default_max_iters=10_000,
     supports_batch=False,        # shard_map placement, not vmappable
     supports_mesh=True,
+    supports_streaming=True,     # per-shard delta contraction, C-2 only
     paper_ref="§III-B over §IV's distributed mapping",
 ))
 

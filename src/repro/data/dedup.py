@@ -10,15 +10,24 @@ parallelism, tiny iteration count).
 Pipeline: shingle -> MinHash signatures -> LSH banding -> candidate pairs
 -> Contour CC -> keep the minimum doc id per cluster (Contour's min-label
 fixed point *is* the canonical representative).
+
+Two entry points:
+
+* :func:`minhash_dedup` — one batch pass over a finite corpus;
+* :class:`StreamingDedup` — the *online* form: documents arrive in
+  micro-batches, each batch's LSH collisions are ingested into a
+  :class:`~repro.connectivity.streaming.StreamingConnectivity` engine,
+  and cluster membership is queryable after every batch without
+  re-solving (serve-path dedup: "is this an already-seen page?").
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.connectivity import SolveOptions, solve
+from repro.connectivity import SolveOptions, StreamingConnectivity, solve
 from repro.graphs.structs import Graph, canonicalize_edges
 
 _MERSENNE = (1 << 61) - 1
@@ -58,19 +67,35 @@ def minhash_signatures(
     return sigs
 
 
+def _band_keys(sigs: np.ndarray, bands: int) -> np.ndarray:
+    """(n_docs, bands) int64 bucket key per band.
+
+    The single definition of the band hash: both the batch pass
+    (:func:`lsh_candidate_pairs`) and the streaming pass
+    (:class:`StreamingDedup`) bucket through it, which is what makes
+    their cluster partitions bit-identical.
+    """
+    n_docs, n_hashes = sigs.shape
+    assert n_hashes % bands == 0
+    rows = n_hashes // bands
+    keys = np.empty((n_docs, bands), np.int64)
+    for b in range(bands):
+        band = sigs[:, b * rows:(b + 1) * rows]
+        key = np.zeros(n_docs, np.int64)
+        for c in range(rows):
+            key = (key * np.int64(1_000_003) + band[:, c]) % _MERSENNE
+        keys[:, b] = key
+    return keys
+
+
 def lsh_candidate_pairs(
     sigs: np.ndarray, bands: int = 16
 ) -> tuple[np.ndarray, np.ndarray]:
     """Band the signatures; docs sharing any band bucket become an edge."""
-    n_docs, n_hashes = sigs.shape
-    assert n_hashes % bands == 0
-    rows = n_hashes // bands
+    keys = _band_keys(sigs, bands)
     srcs, dsts = [], []
     for b in range(bands):
-        band = sigs[:, b * rows : (b + 1) * rows]
-        key = np.zeros(n_docs, np.int64)
-        for c in range(rows):
-            key = (key * np.int64(1_000_003) + band[:, c]) % _MERSENNE
+        key = keys[:, b]
         order = np.argsort(key, kind="stable")
         ks = key[order]
         # group boundaries; chain consecutive members of each bucket
@@ -110,3 +135,91 @@ def minhash_dedup(
         n_candidate_pairs=int(src.shape[0]),
         cc_iterations=int(result.iterations),
     )
+
+
+class StreamingDedup:
+    """Online MinHash-LSH dedup over document micro-batches.
+
+    Maintains, per LSH band, a host dict ``bucket key -> first doc id``;
+    each new document that lands in an occupied bucket contributes one
+    candidate edge to its bucket's representative — within a bucket that
+    chains every member into one component, the same partition the batch
+    path's consecutive-pair chaining produces.  The edges stream into a
+    :class:`StreamingConnectivity` engine (vertex set grown per batch),
+    so ``labels()``/``is_duplicate()`` answer after every batch from the
+    resident converged labels — no per-query re-solve.
+
+    The MinHash parameters are seeded identically to
+    :func:`minhash_signatures`, so a streamed corpus clusters exactly
+    like the one-shot :func:`minhash_dedup` pass over the same docs
+    (property-tested in ``tests/test_data_dedup.py``).
+    """
+
+    def __init__(self, *, n_hashes: int = 64, bands: int = 16,
+                 shingle: int = 5, seed: int = 0,
+                 options: Optional[SolveOptions] = None):
+        self._kw = dict(n_hashes=n_hashes, shingle=shingle, seed=seed)
+        self._bands = bands
+        self._buckets: List[Dict[int, int]] = [dict() for _ in range(bands)]
+        self._n_docs = 0
+        self._n_pairs = 0
+        self._engine = StreamingConnectivity(
+            0, options if options is not None
+            else SolveOptions(algorithm="contour"))
+
+    @property
+    def engine(self) -> StreamingConnectivity:
+        """The underlying connectivity engine (for snapshots/counters)."""
+        return self._engine
+
+    @property
+    def n_docs(self) -> int:
+        return self._n_docs
+
+    @property
+    def n_candidate_pairs(self) -> int:
+        return self._n_pairs
+
+    def add_docs(self, docs: Sequence[np.ndarray]) -> np.ndarray:
+        """Ingest a document micro-batch; returns the new docs' ids."""
+        ids = np.arange(self._n_docs, self._n_docs + len(docs))
+        if not len(docs):
+            return ids
+        sigs = minhash_signatures(docs, n_hashes=self._kw["n_hashes"],
+                                  shingle=self._kw["shingle"],
+                                  seed=self._kw["seed"])
+        keys = _band_keys(sigs, self._bands)
+        srcs, dsts = [], []
+        for i, doc_id in enumerate(ids):
+            for b in range(self._bands):
+                rep = self._buckets[b].setdefault(int(keys[i, b]),
+                                                  int(doc_id))
+                if rep != doc_id:
+                    srcs.append(rep)
+                    dsts.append(int(doc_id))
+        self._n_docs += len(docs)
+        self._n_pairs += len(srcs)
+        self._engine.ingest(np.asarray(srcs, np.int64),
+                            np.asarray(dsts, np.int64),
+                            n_vertices=self._n_docs)
+        return ids
+
+    def labels(self) -> np.ndarray:
+        """Cluster label (min doc id) per ingested doc — O(1) snapshot."""
+        return np.asarray(self._engine.labels)
+
+    def is_duplicate(self, doc_id) -> bool:
+        """True iff ``doc_id`` is not its cluster's representative."""
+        return int(self._engine.component_of(doc_id)) != int(doc_id)
+
+    def report(self) -> DedupReport:
+        """Cumulative :class:`DedupReport` over everything streamed."""
+        labels = self.labels()
+        keep = labels == np.arange(self._n_docs)
+        return DedupReport(
+            labels=labels,
+            keep=keep,
+            n_clusters=int(keep.sum()),
+            n_candidate_pairs=self._n_pairs,
+            cc_iterations=int(self._engine.snapshot().iterations),
+        )

@@ -1,0 +1,202 @@
+"""Cross-solver metamorphic conformance suite.
+
+Every registered solver family, on every backend it can run here, must
+satisfy the metamorphic invariances of the connectivity *problem* — not
+of any particular algorithm:
+
+* **vertex relabelling** — permuting vertex ids permutes the partition
+  (permutation equivariance);
+* **edge orientation** — flipping (or symmetrising) edge direction
+  changes nothing: the edge list is an undirected graph;
+* **edge duplication** — repeating edges changes nothing;
+* **self-loops** — adding self-loops changes nothing;
+* **disjoint union** — stacking two graphs block-diagonally solves each
+  block independently (labels are the per-block labels, offset).
+
+Each transformed solve is compared *component-partition-equal* to the
+NumPy oracle (``graphs/oracle.py``); transforms that preserve the vertex
+set are additionally compared bit-exact to the untransformed solve, since
+every solver here converges to the canonical min-vertex-id labelling.
+
+Deterministic seeded instances always run; when ``hypothesis`` is
+installed (the CI fast tier installs it) a property-based layer fuzzes
+the same invariances over random graphs and permutations.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import jax_compat
+from repro.connectivity import SolveOptions, list_solvers, solve
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle, labels_equivalent
+from repro.graphs.structs import Graph
+
+try:
+    import hypothesis  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+def _mesh1():
+    return jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+# every (solver, backend) pair that can execute on this host; the Pallas
+# backends only run in interpret mode off-TPU, which the slow tier covers
+# elsewhere (tests/test_kernels.py) — conformance runs the compiled paths.
+SOLVER_CONFIGS = [
+    ("contour", dict(algorithm="contour", backend="xla")),
+    ("contour-auto", dict(algorithm="contour", backend="auto")),
+    ("contour-Cm", dict(algorithm="contour", variant="C-m", backend="xla")),
+    ("contour-frontier", dict(algorithm="contour", backend="xla",
+                              sampling=2, compact_every=2)),
+    ("fastsv", dict(algorithm="fastsv")),
+    ("label_propagation", dict(algorithm="label_propagation")),
+    ("union_find", dict(algorithm="union_find")),
+    ("distributed", dict(algorithm="distributed", mesh="MESH1")),
+]
+CONFIG_IDS = [name for name, _ in SOLVER_CONFIGS]
+
+
+def test_every_registry_solver_is_covered():
+    """The matrix above must not silently rot as families are added.
+
+    Compared against the built-in families (other tests may register
+    throwaway solvers into the process-global registry).
+    """
+    from repro.connectivity import solvers as builtin
+    built_in = {spec.name for spec in (builtin.CONTOUR, builtin.DISTRIBUTED,
+                                       builtin.FASTSV,
+                                       builtin.LABEL_PROPAGATION,
+                                       builtin.UNION_FIND)}
+    covered = {cfg.get("algorithm") for _, cfg in SOLVER_CONFIGS}
+    assert built_in <= covered
+    assert built_in <= set(list_solvers())
+
+
+def _solve_np(graph: Graph, cfg: dict) -> np.ndarray:
+    cfg = dict(cfg)
+    if cfg.get("mesh") == "MESH1":
+        cfg["mesh"] = _mesh1()
+    return np.asarray(solve(graph, SolveOptions(**cfg)).labels)
+
+
+def _graphs(small_only: bool = False):
+    gs = [
+        ("path", gen.path(120, seed=3)),
+        ("mix", gen.components_mix([gen.path(40, seed=1),
+                                    gen.star(30, seed=2),
+                                    gen.grid2d(6, 6)], seed=4)),
+    ]
+    if not small_only:
+        gs.append(("rmat", gen.rmat(8, seed=5)))
+    return gs
+
+
+def _assert_oracle_partition(labels: np.ndarray, graph: Graph, ctx):
+    oracle = connected_components_oracle(*graph.to_numpy())
+    assert labels_equivalent(labels, oracle), ctx
+
+
+@pytest.mark.parametrize("name,cfg", SOLVER_CONFIGS, ids=CONFIG_IDS)
+def test_vertex_relabelling_equivariance(name, cfg):
+    rng = np.random.default_rng(7)
+    for gname, g in _graphs():
+        src, dst, n = g.to_numpy()
+        pi = rng.permutation(n)
+        gp = Graph.from_numpy(pi[src], pi[dst], n)
+        base = _solve_np(g, cfg)
+        permuted = _solve_np(gp, cfg)
+        # vertex v of g is vertex pi[v] of gp: the pulled-back labelling
+        # must induce the same partition
+        assert labels_equivalent(permuted[pi], base), (name, gname)
+        _assert_oracle_partition(permuted, gp, (name, gname))
+
+
+@pytest.mark.parametrize("name,cfg", SOLVER_CONFIGS, ids=CONFIG_IDS)
+def test_orientation_and_symmetrisation_invariance(name, cfg):
+    for gname, g in _graphs():
+        src, dst, n = g.to_numpy()
+        base = _solve_np(g, cfg)
+        flipped = _solve_np(Graph.from_numpy(dst, src, n), cfg)
+        both = _solve_np(g.symmetrized(), cfg)
+        # same vertex set + canonical min-id labels => bit-exact
+        assert (flipped == base).all(), (name, gname)
+        assert (both == base).all(), (name, gname)
+        _assert_oracle_partition(base, g, (name, gname))
+
+
+@pytest.mark.parametrize("name,cfg", SOLVER_CONFIGS, ids=CONFIG_IDS)
+def test_duplication_and_self_loop_invariance(name, cfg):
+    rng = np.random.default_rng(11)
+    for gname, g in _graphs():
+        src, dst, n = g.to_numpy()
+        base = _solve_np(g, cfg)
+        dup = Graph.from_numpy(np.concatenate([src, src]),
+                               np.concatenate([dst, dst]), n)
+        loops = rng.integers(0, n, 13)
+        looped = Graph.from_numpy(np.concatenate([src, loops]),
+                                  np.concatenate([dst, loops]), n)
+        assert (_solve_np(dup, cfg) == base).all(), (name, gname)
+        assert (_solve_np(looped, cfg) == base).all(), (name, gname)
+
+
+@pytest.mark.parametrize("name,cfg", SOLVER_CONFIGS, ids=CONFIG_IDS)
+def test_disjoint_union_block_diagonality(name, cfg):
+    (n1_name, g1), (n2_name, g2) = _graphs(small_only=True)
+    s1, d1, n1 = g1.to_numpy()
+    s2, d2, n2 = g2.to_numpy()
+    union = Graph.from_numpy(np.concatenate([s1, s2 + n1]),
+                             np.concatenate([d1, d2 + n1]), n1 + n2)
+    labels = _solve_np(union, cfg)
+    base1 = _solve_np(g1, cfg)
+    base2 = _solve_np(g2, cfg)
+    # blocks are independent; min-id labels of the offset block shift by n1
+    assert (labels[:n1] == base1).all(), (name, n1_name)
+    assert (labels[n1:] == base2 + n1).all(), (name, n2_name)
+    _assert_oracle_partition(labels, union, name)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer: the same invariances over random graphs/permutations
+
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    # keep the fuzz layer off the two expensive configs (mesh re-jits per
+    # call; the host union-find is a python loop) — the deterministic
+    # layer above already covers them
+    FUZZ_CONFIGS = [(n, c) for n, c in SOLVER_CONFIGS
+                    if n not in ("distributed", "union_find")]
+
+    @st.composite
+    def random_graph_and_perm(draw):
+        n = draw(st.integers(2, 60))
+        m = draw(st.integers(0, 3 * n))
+        rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        return Graph.from_numpy(src, dst, n), rng.permutation(n)
+
+    @settings(max_examples=20, deadline=None)
+    @given(random_graph_and_perm(),
+           st.sampled_from([n for n, _ in FUZZ_CONFIGS]))
+    def test_fuzz_metamorphic_invariances(gp, config_name):
+        cfg = dict(FUZZ_CONFIGS)[config_name]
+        g, pi = gp
+        src, dst, n = g.to_numpy()
+        base = _solve_np(g, cfg)
+        _assert_oracle_partition(base, g, config_name)
+        permuted = _solve_np(Graph.from_numpy(pi[src], pi[dst], n), cfg)
+        assert labels_equivalent(permuted[pi], base), config_name
+        flipped = _solve_np(Graph.from_numpy(dst, src, n), cfg)
+        assert (flipped == base).all(), config_name
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; the deterministic "
+                             "metamorphic layer above still ran")
+    def test_fuzz_metamorphic_invariances():
+        pass

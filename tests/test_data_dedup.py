@@ -1,7 +1,8 @@
 """Data pipeline determinism + the Contour-powered dedup integration."""
 import numpy as np
 
-from repro.data.dedup import lsh_candidate_pairs, minhash_dedup, minhash_signatures
+from repro.data.dedup import (StreamingDedup, lsh_candidate_pairs,
+                              minhash_dedup, minhash_signatures)
 from repro.data.pipeline import SyntheticTokenPipeline, make_corpus
 
 
@@ -58,3 +59,43 @@ def test_dedup_no_duplicates_corpus():
     docs = [rng.integers(0, 10_000, 64) for _ in range(30)]
     report = minhash_dedup(docs, n_hashes=32, bands=8)
     assert report.n_clusters >= 28      # little to no collapse
+
+
+def test_streaming_dedup_matches_batch_dedup():
+    """Online LSH ingestion lands on the one-shot pass's exact labels.
+
+    Per band, the batch path chains consecutive bucket members while the
+    streaming path links each arrival to the bucket's first member — both
+    make every bucket one connected set, and signatures are per-doc
+    deterministic, so the cluster partitions (and their canonical min-id
+    labels) must coincide no matter how the corpus is micro-batched.
+    """
+    docs = make_corpus(n_docs=90, doc_len=120, vocab_size=400,
+                       dup_fraction=0.4, near_dup_noise=0.03, seed=7)
+    batch_report = minhash_dedup(docs, n_hashes=32, bands=8)
+
+    for batch_size in (7, 30, 90):
+        sd = StreamingDedup(n_hashes=32, bands=8)
+        for pos in range(0, len(docs), batch_size):
+            sd.add_docs(docs[pos:pos + batch_size])
+        assert sd.n_docs == len(docs)
+        assert (sd.labels() == batch_report.labels).all(), batch_size
+        report = sd.report()
+        assert report.n_clusters == batch_report.n_clusters
+        assert (report.keep == batch_report.keep).all()
+        # representatives are non-duplicates; later cluster members are
+        rep = int(np.flatnonzero(report.keep)[0])
+        assert not sd.is_duplicate(rep)
+        dups = np.flatnonzero(~report.keep)
+        if dups.size:
+            assert sd.is_duplicate(int(dups[0]))
+
+
+def test_streaming_dedup_empty_and_single_batches():
+    sd = StreamingDedup(n_hashes=32, bands=8)
+    assert sd.add_docs([]).size == 0
+    rng = np.random.default_rng(1)
+    ids = sd.add_docs([rng.integers(0, 500, 64)])
+    assert ids.tolist() == [0]
+    assert sd.labels().tolist() == [0]
+    assert not sd.is_duplicate(0)

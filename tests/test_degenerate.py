@@ -1,0 +1,118 @@
+"""Degenerate-shape regressions: m=0, n=1, all-self-loop, empty batch.
+
+Tiny shapes are where static-shape JAX code miscompiles quietly: the
+``m // 4`` sampling prefix at m=0, the ``compact_every`` stable partition
+over zero edges, ``vmap`` over a B=0 fleet, empty scatters.  Every solver
+and the frontier schedule must return the identity labelling (every
+vertex its own component) for an edgeless graph, and treat self-loops as
+no-ops, through ``solve``, ``solve_batch`` and the streaming engine.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.connectivity import (SolveOptions, StreamingConnectivity, solve,
+                                solve_batch, stack_graphs)
+from repro.connectivity.contour import contour_labels
+from repro.graphs.structs import Graph
+
+ALGOS = ("contour", "fastsv", "label_propagation", "union_find")
+
+
+def _empty(n: int) -> Graph:
+    z = np.zeros(0, np.int32)
+    return Graph.from_numpy(z, z, n)
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+@pytest.mark.parametrize("n", (1, 5))
+def test_edgeless_graph_is_identity(algorithm, n):
+    res = solve(_empty(n), algorithm=algorithm)
+    assert (np.asarray(res.labels) == np.arange(n)).all()
+    assert res.n_components == n
+    assert bool(res.converged)
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_all_self_loop_graph_is_identity(algorithm):
+    n = 6
+    loops = np.arange(n, dtype=np.int32)
+    res = solve(Graph.from_numpy(loops, loops, n), algorithm=algorithm)
+    assert (np.asarray(res.labels) == np.arange(n)).all()
+    assert res.n_components == n
+
+
+@pytest.mark.parametrize("n", (1, 4))
+def test_frontier_schedule_at_m0(n):
+    """The m//4 sampling prefix and the compaction partition at m=0."""
+    res = solve(_empty(n),
+                SolveOptions(backend="xla", sampling=2, compact_every=2))
+    assert (np.asarray(res.labels) == np.arange(n)).all()
+    assert float(res.edges_visited) == 0.0
+    # and straight through the jitted kernel entry
+    z = jnp.zeros((0,), jnp.int32)
+    L, it, done, visited = contour_labels(z, z, n, backend="xla",
+                                          sampling=3, compact_every=1)
+    assert (np.asarray(L) == np.arange(n)).all()
+    assert bool(done)
+    assert float(visited) == 0.0
+
+
+def test_single_vertex_with_self_loop():
+    res = solve(Graph.from_numpy(np.array([0]), np.array([0]), 1),
+                backend="xla", sampling=1, compact_every=1)
+    assert np.asarray(res.labels).tolist() == [0]
+    assert res.n_components == 1
+
+
+def test_empty_stack_graphs_and_solve_batch():
+    stacked, sizes = stack_graphs([], with_sizes=True)
+    assert sizes == ()
+    assert stacked.src.shape[0] == 0
+
+    for graphs in ([], stacked):
+        res = solve_batch(graphs, backend="xla")
+        assert res.is_batched
+        assert res.labels.shape[0] == 0
+        assert res.unstack() == []
+
+    # empty fleet composes with the frontier schedule and batch_sizes
+    res = solve_batch([], SolveOptions(sampling=1, compact_every=1),
+                      batch_sizes=())
+    assert res.unstack() == []
+
+    # a mismatched warm_start is a caller bug even on an empty fleet
+    with pytest.raises(ValueError, match="warm_start"):
+        solve_batch([], warm_start=[np.zeros(3, np.int32)])
+    assert solve_batch([], warm_start=[]).unstack() == []
+
+
+@pytest.mark.parametrize("algorithm", ("contour", "fastsv",
+                                       "label_propagation"))
+def test_solve_batch_of_edgeless_graphs(algorithm):
+    """A fleet whose members all have m=0 pads to one self-loop slot."""
+    res = solve_batch([_empty(3), _empty(5)], algorithm=algorithm)
+    parts = res.unstack()
+    assert [p.labels.shape[0] for p in parts] == [3, 5]
+    for p in parts:
+        labels = np.asarray(p.labels)
+        assert (labels == np.arange(labels.shape[0])).all()
+
+
+def test_streaming_engine_degenerate_stream():
+    eng = StreamingConnectivity(1)
+    eng.ingest([], [])
+    eng.ingest([0], [0])                      # self-loop batch
+    assert eng.n_components == 1
+    assert np.asarray(eng.labels).tolist() == [0]
+    snap = eng.snapshot()
+    assert bool(snap.converged)
+
+
+def test_mixed_degenerate_warm_start_roundtrip():
+    """m=0 solve results remain valid warm starts as the graph grows."""
+    prev = solve(_empty(4), backend="xla")
+    grown = _empty(4).add_edges([0, 2], [1, 3])
+    res = solve(grown, backend="xla", warm_start=prev)
+    assert np.asarray(res.labels).tolist() == [0, 0, 2, 2]

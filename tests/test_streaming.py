@@ -1,0 +1,357 @@
+"""Streaming incremental connectivity (``connectivity.streaming``).
+
+The load-bearing equivalence: any batching/ordering of a shuffled edge
+stream must land **bit-identical** to the one-shot ``solve()`` on the
+final graph — both converge to the canonical min-vertex-id labelling, so
+this is an exact array equality, not just partition equality.  Plus the
+soundness counterexample that shapes the engine (the supervertex rewrite),
+the work counter, snapshots/queries, vertex growth, the vmapped delta
+core, and the mesh path.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import jax_compat
+from repro.connectivity import (SolveOptions, StreamingConnectivity, solve,
+                                solve_batch)
+from repro.connectivity import minmap as lab
+from repro.connectivity.streaming import (_pad_batch, delta_converge,
+                                          next_pow2)
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle
+from repro.graphs.structs import Graph
+
+
+def _shuffled(graph, seed):
+    src, dst, n = graph.to_numpy()
+    perm = np.random.default_rng(seed).permutation(src.shape[0])
+    return src[perm], dst[perm], n
+
+
+def _stream(eng, src, dst, n_batches, **kw):
+    m = len(src)
+    for b in range(n_batches):
+        sl = slice(b * m // n_batches, (b + 1) * m // n_batches)
+        eng.ingest(src[sl], dst[sl], **kw)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# equivalence: any batching == one-shot solve, bit-identical
+
+
+@pytest.mark.parametrize("n_batches", (1, 7, 32))
+@pytest.mark.parametrize(
+    "graph", (gen.path(2000, seed=3), gen.rmat(10, seed=5),
+              gen.components_mix([gen.path(300, seed=1),
+                                  gen.star(200, seed=2),
+                                  gen.grid2d(12, 12)], seed=7)),
+    ids=("path", "rmat", "mix"))
+def test_stream_bit_identical_to_oneshot(graph, n_batches):
+    src, dst, n = _shuffled(graph, seed=n_batches)
+    eng = _stream(StreamingConnectivity(n), src, dst, n_batches)
+    one = solve(graph, backend="xla")
+    snap = eng.snapshot()
+    assert (np.asarray(snap.labels) == np.asarray(one.labels)).all()
+    assert bool(snap.converged)
+    # the delta path must do *less* edge work than the dense one-shot
+    # sweep whenever the stream is split at all
+    if n_batches > 1:
+        assert float(snap.edges_visited) < float(one.edges_visited)
+
+
+def test_random_batchings_and_variants():
+    """Randomised soak: arbitrary batch sizes, stream orders, variants.
+
+    Includes order-1 variants (C-1, C-1m1m): the supervertex rewrite makes
+    them sound too — see ``test_delta_sweep_needs_supervertex_rewrite``
+    for what happens without it.
+    """
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(2, 100))
+        m = int(rng.integers(0, 4 * n))
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        variant = str(rng.choice(["C-2", "C-m", "C-3", "C-1", "C-1m1m",
+                                  "C-11mm"]))
+        eng = StreamingConnectivity(
+            n, variant=variant, backend="xla",
+            compact_every=int(rng.integers(0, 3)))
+        pos = 0
+        while pos < m:
+            k = int(rng.integers(1, max(2, m // 3 + 1)))
+            eng.ingest(src[pos:pos + k], dst[pos:pos + k])
+            pos += k
+        oracle = connected_components_oracle(src, dst, n)
+        assert (np.asarray(eng.labels) == oracle).all(), (trial, variant)
+
+
+def test_delta_sweep_needs_supervertex_rewrite():
+    """The counterexample behind the engine's endpoint rewrite.
+
+    Warm star forest with components {1856-}, {2873, 3417-ish}, {1937-}:
+    batch edges (a, b) and (c, d) can, in ONE synchronous sweep, redirect
+    a shared deep vertex and its root with *different* values, stranding
+    a previously merged vertex — so sweeping a batch's original endpoints
+    is unsound at every MM order.  Minimal form: vertices 0..4, old
+    components {0}, {1}, {2, 3} (L[3] = 2), batch {(0, 3), (1, 2)}.
+    Edge (0,3) writes z=0 to {0, 3, L[3]=2}; edge (1,2) writes z=1 to
+    {1, 2}; the scatter-min leaves L[3]=0 but L[2]=0 too — fine at order
+    2 here, so drive the published failing instance instead: the rewrite
+    path must match the oracle where the raw path diverges.
+    """
+    # old graph: path fragments merged into a star forest
+    rng = np.random.default_rng(3)
+    g = gen.path(600, seed=3)
+    src, dst, n = g.to_numpy()
+    perm = rng.permutation(src.shape[0])
+    src, dst = src[perm], dst[perm]
+    cut = len(src) // 2
+    warm = solve(Graph.from_numpy(src[:cut], dst[:cut], n),
+                 backend="xla").labels
+    batch_s, batch_d = src[cut:], dst[cut:]
+    oracle = connected_components_oracle(src, dst, n)
+
+    # raw delta sweep over original endpoints: converges, but is allowed
+    # to strand vertices (this is the unsound path — assert only that the
+    # *engine's* rewrite path is exact; if the raw path happens to be
+    # right on some seed the rewrite must still match it)
+    k = len(batch_s)
+    pad = next_pow2(k)
+    sp, dp = _pad_batch(jnp.asarray(batch_s), jnp.asarray(batch_d), pad)
+    step_raw = lambda L: lab.pointer_jump(lab.mm_relax(L, sp, dp, 2), 1)
+    L_raw = jnp.asarray(warm)
+    for _ in range(50):
+        L_raw = step_raw(L_raw)
+    raw_ok = (np.asarray(L_raw) == oracle).all()
+
+    eng = StreamingConnectivity(n)
+    eng.ingest(src[:cut], dst[:cut])
+    eng.ingest(batch_s, batch_d)
+    assert (np.asarray(eng.labels) == oracle).all()
+    # this seed reproduces the stranding: keep it load-bearing
+    assert not raw_ok, ("seed no longer exhibits the raw-endpoint "
+                        "counterexample; pick a new one")
+
+
+# ---------------------------------------------------------------------------
+# snapshots, queries, warm starts
+
+
+def test_snapshot_and_queries_without_resolve():
+    g = gen.components_mix([gen.path(100, seed=1), gen.star(80, seed=2)],
+                           seed=3)
+    src, dst, n = _shuffled(g, seed=9)
+    eng = _stream(StreamingConnectivity(n), src, dst, 8)
+    oracle = connected_components_oracle(src, dst, n)
+    snap = eng.snapshot()
+    assert snap is eng.snapshot()            # cached until the next ingest
+    assert (np.asarray(snap.labels) == oracle).all()
+    assert eng.n_components == len(np.unique(oracle))
+    u, v = 0, int(np.flatnonzero(oracle == oracle[0])[-1])
+    assert eng.same_component(u, v)
+    assert eng.component_of(v) == int(oracle[v])
+    # negative ids must raise, not wrap to the array tail
+    with pytest.raises(IndexError, match=">= 0"):
+        eng.component_of(-1)
+    with pytest.raises(IndexError, match=">= 0"):
+        eng.same_component(-1, 0)
+    eng.ingest([0], [n - 1])
+    assert eng.same_component(0, n - 1)      # cache invalidated
+
+
+def test_warm_started_snapshot_seeds_new_engine():
+    g = gen.rmat(9, seed=11)
+    src, dst, n = _shuffled(g, seed=1)
+    cut = len(src) // 2
+    eng1 = _stream(StreamingConnectivity(n), src[:cut], dst[:cut], 4)
+    # hand the snapshot to a fresh engine; stream the rest
+    eng2 = _stream(StreamingConnectivity(n, warm_start=eng1.snapshot()),
+                   src[cut:], dst[cut:], 4)
+    oracle = connected_components_oracle(src, dst, n)
+    assert (np.asarray(eng2.labels) == oracle).all()
+    # and as a warm start for a one-shot solve over the full graph
+    full = Graph.from_numpy(src, dst, n)
+    warm = solve(full, backend="xla", warm_start=eng1.snapshot())
+    assert (np.asarray(warm.labels) == oracle).all()
+
+
+def test_vertex_growth_and_edge_store():
+    eng = StreamingConnectivity(4, min_capacity=4)
+    eng.ingest([0, 1], [1, 2])
+    eng.ingest([3, 5], [4, 5], n_vertices=7)
+    assert eng.n_vertices == 7
+    assert eng.n_edges == 4
+    assert eng.capacity >= 4 and eng.capacity == next_pow2(eng.capacity)
+    # label capacity doubles past 4 -> 8; growth *within* capacity is a
+    # bound bump only (no array reshape, hence no recompile)
+    assert eng.vertex_capacity == 8
+    eng.ingest([7], [0], n_vertices=8)
+    assert eng.vertex_capacity == 8 and eng.n_vertices == 8
+    g = eng.graph()
+    assert g.n_edges == 5 and g.n_vertices == 8
+    oracle = connected_components_oracle(*g.to_numpy())
+    assert np.asarray(eng.labels).shape == (8,)
+    assert (np.asarray(eng.labels) == oracle).all()
+    # shrinking is refused
+    with pytest.raises(ValueError, match="shrinks"):
+        eng.ingest([0], [1], n_vertices=3)
+
+
+def test_ingest_validation_and_empty_batches():
+    eng = StreamingConnectivity(5)
+    eng.ingest([], [])                        # no-op, no solve
+    assert eng.n_batches == 0 and eng.n_edges == 0
+    with pytest.raises(ValueError, match="n_vertices"):
+        eng.ingest([0], [7])
+    with pytest.raises(ValueError, match=">= 0"):
+        eng.ingest([-1], [0])
+    with pytest.raises(ValueError, match="equal-length"):
+        eng.ingest([0, 1], [1])
+    # ingest_graph grows the vertex set automatically
+    eng.ingest_graph(gen.path(9, seed=0, shuffle_ids=False))
+    assert eng.n_vertices == 9
+    assert eng.same_component(0, 8)
+
+
+def test_empty_ingest_with_growth_invalidates_snapshot():
+    """Regression: an edgeless batch that grows the vertex set must not
+    leave a stale cached snapshot behind live queries."""
+    eng = StreamingConnectivity(5)
+    eng.ingest([0, 1], [1, 2])
+    assert eng.n_components == 3
+    eng.ingest([], [], n_vertices=10)
+    assert eng.n_components == 8            # 5 new singletons
+    assert eng.component_of(9) == 9         # was: IndexError off stale labels
+
+
+def test_store_edges_false_bounds_memory_but_keeps_answers():
+    """store_edges=False: O(n) memory, same labels; audit paths refuse."""
+    g = gen.rmat(8, seed=6)
+    src, dst, n = _shuffled(g, seed=2)
+    eng = _stream(StreamingConnectivity(n, store_edges=False), src, dst, 6)
+    assert eng.capacity == 0
+    oracle = connected_components_oracle(src, dst, n)
+    assert (np.asarray(eng.labels) == oracle).all()
+    assert eng.n_edges == len(src)          # count still tracked
+    with pytest.raises(ValueError, match="store_edges=False"):
+        eng.graph()
+    with pytest.raises(ValueError, match="store_edges=False"):
+        eng.resolve()
+
+
+def test_rejects_non_streaming_solvers_and_csyn():
+    with pytest.raises(ValueError, match="does not support streaming"):
+        StreamingConnectivity(4, algorithm="fastsv")
+    with pytest.raises(ValueError, match="does not support streaming"):
+        StreamingConnectivity(4, algorithm="union_find")
+    with pytest.raises(ValueError, match="C-Syn"):
+        StreamingConnectivity(4, variant="C-Syn")
+
+
+def test_unconverged_batch_flags_and_resolve_repairs():
+    src = np.arange(999)
+    dst = np.arange(1, 1000)
+    perm = np.random.default_rng(4).permutation(999)
+    eng = StreamingConnectivity(1000, max_iters=1)
+    eng.ingest(src[perm], dst[perm])
+    assert not bool(eng.snapshot().converged)
+    # the repair must NOT inherit the starved max_iters=1 budget: it
+    # takes the registry default (or an explicit cap) and must converge
+    res = eng.resolve()
+    assert bool(res.converged)
+    assert (np.asarray(res.labels) == 0).all()
+    assert (np.asarray(eng.labels) == 0).all()
+    assert bool(eng.snapshot().converged)
+
+
+def test_failed_delta_solve_leaves_engine_unchanged(monkeypatch):
+    """ingest is atomic: a solve failure must not commit edges/counters."""
+    from repro.connectivity import streaming as streaming_mod
+    eng = StreamingConnectivity(10)
+    eng.ingest([0, 1], [1, 2])
+    before = (eng.n_edges, eng.n_batches, np.asarray(eng.labels).copy(),
+              float(eng.snapshot().edges_visited))
+
+    def boom(*a, **kw):
+        raise RuntimeError("backend failed to compile")
+
+    monkeypatch.setattr(streaming_mod, "delta_converge", boom)
+    with pytest.raises(RuntimeError, match="failed to compile"):
+        eng.ingest([3, 4], [4, 5])
+    assert (eng.n_edges, eng.n_batches) == before[:2]
+    assert (np.asarray(eng.labels) == before[2]).all()
+    assert float(eng.snapshot().edges_visited) == before[3]
+    assert bool(eng.snapshot().converged)
+    # the store holds exactly the committed edges
+    assert eng.graph().n_edges == before[0]
+    # vertex growth in the failed batch rolls back too
+    with pytest.raises(RuntimeError, match="failed to compile"):
+        eng.ingest([12], [13], n_vertices=20)
+    assert eng.n_vertices == 10
+    assert np.asarray(eng.labels).shape == (10,)
+    assert eng.n_components == len(np.unique(before[2]))
+
+
+# ---------------------------------------------------------------------------
+# the vmapped delta core: fleets of parallel streams
+
+
+def test_delta_converge_under_vmap_matches_solve_batch():
+    n, lanes = 64, 3
+    rng = np.random.default_rng(8)
+    S = np.stack([rng.integers(0, n, 3 * n) for _ in range(lanes)])
+    D = np.stack([rng.integers(0, n, 3 * n) for _ in range(lanes)])
+    cut = (3 * n) // 2
+
+    labels = jnp.tile(jnp.arange(n, dtype=jnp.int32), (lanes, 1))
+    vdelta = jax.vmap(
+        lambda s, d, L: delta_converge(s, d, L, jnp.int32(s.shape[0])))
+    # two streamed batches per lane, all lanes in one vmapped program
+    L, _, done1, _ = vdelta(jnp.asarray(S[:, :cut], jnp.int32),
+                            jnp.asarray(D[:, :cut], jnp.int32), labels)
+    L, _, done2, _ = vdelta(jnp.asarray(S[:, cut:], jnp.int32),
+                            jnp.asarray(D[:, cut:], jnp.int32), L)
+    assert bool(done1.all()) and bool(done2.all())
+
+    batch = solve_batch([Graph.from_numpy(S[i], D[i], n)
+                         for i in range(lanes)], backend="xla")
+    assert (np.asarray(L) == np.asarray(batch.labels)).all()
+
+
+# ---------------------------------------------------------------------------
+# mesh path
+
+
+def test_streaming_on_single_device_mesh():
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+    g = gen.components_mix([gen.path(150, seed=1), gen.rmat(7, seed=2)],
+                           seed=3)
+    src, dst, n = _shuffled(g, seed=5)
+    eng = _stream(StreamingConnectivity(n, SolveOptions(mesh=mesh)),
+                  src, dst, 4)
+    oracle = connected_components_oracle(src, dst, n)
+    assert (np.asarray(eng.labels) == oracle).all()
+    assert bool(eng.snapshot().converged)
+    assert float(eng.snapshot().edges_visited) > 0
+
+
+def test_mesh_streaming_excludes_padding_from_visited():
+    """The pow2 bucket padding must be born retired on the mesh path too.
+
+    A 1-device mesh runs the identical global schedule as the
+    single-device engine, so for the same stream the work counter must
+    agree *exactly* — any padding leak (a 3-edge batch pads to 4)
+    inflates the mesh side first."""
+    mesh = jax_compat.device_mesh(np.array(jax.devices()[:1]), ("data",))
+    eng_mesh = StreamingConnectivity(4, SolveOptions(mesh=mesh))
+    eng_one = StreamingConnectivity(4)
+    for eng in (eng_mesh, eng_one):
+        eng.ingest([0, 1, 2], [1, 2, 3])
+        assert (np.asarray(eng.labels) == 0).all()
+    assert (float(eng_mesh.snapshot().edges_visited)
+            == float(eng_one.snapshot().edges_visited))
