@@ -18,7 +18,11 @@ Fails (exit 1) when:
 * the streaming gate regressed (schema 3) — a 64-micro-batch shuffled
   stream through ``StreamingConnectivity`` must land bit-identical to the
   one-shot solve with cumulative ``edges_visited`` under 2x the dense
-  sweep on every suite graph (DESIGN.md §11).
+  sweep on every suite graph (DESIGN.md §11);
+* the recovery gate regressed (schema 4) — a stream surviving two
+  injected crashes (restore + replay through the crash-restart driver)
+  must land bit-identical to the fault-free stream with cumulative
+  ``edges_visited`` under 2x the clean run (DESIGN.md §12).
 
 Stdlib-only on purpose: the gate must run before (or without) the package
 environment, e.g. as a bare CI step.
@@ -63,6 +67,15 @@ def check(payload: dict) -> list:
     if "streaming_bit_identical" not in summary and \
             int(payload.get("schema", 0)) >= 3:
         errors.append("schema >= 3 artifact is missing the streaming gate")
+    for key, field in (("recovery_bit_identical", "bit_identical"),
+                       ("recovery_work_lt_2x_clean", "lt_2x_clean")):
+        if key in summary and not summary[key]:
+            bad = [g for g, row in payload.get("recovery", {}).items()
+                   if not row.get(field)]
+            errors.append(f"{key} regressed (graphs: {bad})")
+    if "recovery_bit_identical" not in summary and \
+            int(payload.get("schema", 0)) >= 4:
+        errors.append("schema >= 4 artifact is missing the recovery gate")
     return errors
 
 
@@ -82,7 +95,9 @@ def main(argv) -> int:
           f"frontier_visits_fewer_edges="
           f"{summary.get('frontier_visits_fewer_edges')}, "
           f"streaming_bit_identical="
-          f"{summary.get('streaming_bit_identical')})")
+          f"{summary.get('streaming_bit_identical')}, "
+          f"recovery_bit_identical="
+          f"{summary.get('recovery_bit_identical')})")
     return 0
 
 

@@ -32,6 +32,7 @@ from benchmarks import (
     fig2_time,
     fig3_speedup_fastsv,
     fig4_speedup_connectit,
+    recovery,
     roofline_report,
     scaling_delaunay,
     streaming,
@@ -46,6 +47,7 @@ SECTIONS = [
     ("distributed_contour", distributed_scaling.main),
     ("dedup_integration", dedup_bench.main),
     ("streaming_vs_scratch", streaming.main),
+    ("recovery_overhead", recovery.main),
     ("roofline_report", roofline_report.main),
 ]
 
@@ -86,6 +88,8 @@ def main() -> None:
             payload = connectivity.records_to_json(records, fast=args.fast,
                                                    gate=gate,
                                                    streaming=stream_gate)
+            recovery.merge_into_artifact(payload,
+                                         recovery.run_gate(fast=args.fast))
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=2)
             print(f"\nwrote {args.json}: {payload['summary']}")

@@ -43,11 +43,22 @@ from repro.connectivity.solve import solve
 from repro.connectivity.batch import solve_batch, stack_graphs
 from repro.connectivity.contour import VARIANTS
 from repro.connectivity.streaming import StreamingConnectivity
+from repro.connectivity.resilience import (
+    RecoveryStats,
+    resilient_distributed_contour,
+    stream_with_recovery,
+)
 from repro.graphs.structs import Graph
+from repro.runtime.recovery import FaultInjector, ShardLossFault, \
+    SimulatedFault
 
 __all__ = [
     "ComponentResult",
+    "FaultInjector",
     "Graph",
+    "RecoveryStats",
+    "ShardLossFault",
+    "SimulatedFault",
     "SolveOptions",
     "SolverSpec",
     "StreamingConnectivity",
@@ -55,8 +66,10 @@ __all__ = [
     "get_solver",
     "list_solvers",
     "register_solver",
+    "resilient_distributed_contour",
     "solve",
     "solve_batch",
     "solver_specs",
     "stack_graphs",
+    "stream_with_recovery",
 ]

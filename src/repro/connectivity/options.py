@@ -54,6 +54,11 @@ class SolveOptions:
     sampling: int = 0                      # frontier sample-prefix sweeps
     compact_every: int = 0                 # contraction cadence (0 = dense)
     warm_start: Optional[Any] = None       # labels array or ComponentResult
+    # graceful degradation (DESIGN.md §12): when a non-XLA kernel launch
+    # fails with a transient error, retry the solve on the XLA reference
+    # backend and record the fallback in ComponentResult.provenance
+    # instead of failing the request.  False = fail loudly.
+    kernel_fallback: bool = True
 
     def replace(self, **updates) -> "SolveOptions":
         """Return a copy with the given fields replaced."""

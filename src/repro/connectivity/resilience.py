@@ -1,0 +1,341 @@
+"""Fault tolerance for the connectivity stack (DESIGN.md §12).
+
+The production service the ROADMAP targets must survive the failures
+scale brings: a crashed host mid-stream, a lost shard mid-solve, a
+straggling device dragging every collective.  This module wires the
+previously train-loop-only runtime machinery (``repro.runtime.*``,
+``repro.checkpoint``) into ``repro.connectivity``:
+
+* :func:`stream_with_recovery` — a crash-restart driver for
+  :class:`~repro.connectivity.streaming.StreamingConnectivity`:
+  periodic atomic checkpoints of the full engine state (ring-buffered
+  edge store, labels, counters) through ``CheckpointManager``'s
+  write-to-tmp-then-rename protocol, restore-on-failure with a bounded
+  retry budget and exponential backoff, and replay of only the batches
+  ingested after the last committed checkpoint.  Recovery is **bit
+  exact**: ingest is deterministic and atomic (a fault anywhere before
+  the commit leaves the engine at its pre-batch state), so replaying
+  the uncommitted suffix from a snapshot lands on exactly the labels a
+  fault-free run produces.  A :class:`StragglerMonitor` can drive the
+  checkpoint cadence: persistent slow batches force a snapshot *now* so
+  a replace-and-restart loses no work.
+
+* :func:`resilient_distributed_contour` — elastic shrink-and-resume for
+  distributed solves.  The fixpoint runs in bounded blocks of global
+  rounds; between blocks the driver consults a fault injector (and, in
+  a real deployment, the collective's health).  On a
+  :class:`ShardLossFault` it re-derives a smaller mesh over the
+  surviving devices via :func:`repro.runtime.elastic.elastic_mesh`,
+  re-shards the edge arrays, and warm-starts from the last good labels.
+
+  **Soundness of the warm restart** (the load-bearing argument): every
+  intermediate label array of a min-mapping solver satisfies the
+  invariant "``L[v]`` is a vertex in ``v``'s component" and labels are
+  monotone non-increasing toward the *unique* fixed point (the
+  per-component minimum id).  Any stale snapshot therefore remains a
+  valid ``init_labels`` — exactly the contract
+  ``minmap.resolve_init_labels`` validates — and the resumed solve
+  converges to labels bit-identical to a fault-free run, regardless of
+  which rounds were lost, on how many shards, or how stale the
+  snapshot is.
+
+Both drivers record what they survived: restart/shrink/checkpoint
+counts in a stats dict, and degradation events (elastic shrinks,
+straggler evictions, kernel fallbacks) in
+:attr:`ComponentResult.provenance`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence, Tuple, Type
+
+import jax
+import numpy as np
+
+from repro.connectivity import distributed as dist
+from repro.connectivity.options import SolveOptions
+from repro.connectivity.result import ComponentResult
+from repro.connectivity.solve import make_result, resolve_warm_start
+from repro.connectivity.streaming import StreamingConnectivity
+from repro.graphs.structs import Graph
+from repro.runtime.elastic import elastic_mesh
+from repro.runtime.recovery import (FaultInjector, ShardLossFault,
+                                    SimulatedFault, backoff_delay)
+from repro.runtime.straggler import StragglerMonitor
+
+
+def stream_with_recovery(
+    batches: Sequence[tuple],
+    n_vertices: int,
+    manager,
+    options: Optional[SolveOptions] = None,
+    *,
+    checkpoint_every: int = 8,
+    max_restarts: int = 5,
+    fault_injector: Optional[FaultInjector] = None,
+    straggler: Optional[StragglerMonitor] = None,
+    recoverable: Tuple[Type[BaseException], ...] = (SimulatedFault,),
+    backoff_base: float = 0.0,
+    backoff_factor: float = 2.0,
+    backoff_cap: float = 30.0,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    on_event: Optional[Callable[[str, int], None]] = None,
+    **overrides,
+) -> tuple[StreamingConnectivity, dict]:
+    """Stream ``batches`` through a checkpointed engine with recovery.
+
+    Args:
+      batches: seekable sequence of ``(src, dst)`` or
+        ``(src, dst, n_vertices)`` micro-batches — batch ``k`` must be a
+        pure function of ``k`` (the replay half of exact recovery; the
+        atomic checkpoints are the other half).
+      n_vertices: initial vertex count for a cold start.
+      manager: a :class:`~repro.checkpoint.manager.CheckpointManager`.
+        If it already holds a checkpoint, the stream *resumes* from it
+        (crash-restart across processes) and earlier batches are never
+        re-ingested.
+      options / overrides: engine :class:`SolveOptions`, as for
+        :class:`StreamingConnectivity`.
+      checkpoint_every: snapshot cadence in committed batches; the final
+        batch always checkpoints.
+      fault_injector: consulted by ``ingest`` at its ``"pre"`` /
+        ``"post_write"`` sites (see streaming) — chaos-testing hook.
+      straggler: optional monitor fed per-batch wall time; a
+        ``"checkpoint"``/``"evict"`` escalation forces an immediate
+        snapshot regardless of cadence (so a degrading host can be
+        replaced with no lost work).
+      recoverable: exception types that trigger restore-and-retry;
+        anything else propagates after rolling the engine back (ingest
+        is atomic, so the engine stays queryable).
+      max_restarts: total restart budget; exceeding it re-raises.
+      backoff_*: exponential backoff between restarts (0 = none);
+        ``sleep_fn`` is injectable for tests.
+
+    Returns ``(engine, stats)`` with
+    ``stats = {"restarts", "checkpoints", "replayed_batches",
+    "straggler_events"}``.
+    """
+    if checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, got "
+                         f"{checkpoint_every}")
+    stats = {"restarts": 0, "checkpoints": 0, "replayed_batches": 0,
+             "straggler_events": 0}
+
+    def fresh():
+        return StreamingConnectivity(n_vertices, options,
+                                     fault_injector=fault_injector,
+                                     **overrides)
+
+    if manager.latest_step() is not None:
+        eng, start = StreamingConnectivity.restore(
+            manager, options, fault_injector=fault_injector, **overrides)
+    else:
+        eng, start = fresh(), 0
+
+    n_batches = len(batches)
+    restarts = 0
+    b = start
+    while b < n_batches:
+        try:
+            if straggler is not None:
+                straggler.start_step()
+            eng.ingest(*batches[b])
+            action = straggler.end_step() if straggler is not None else "ok"
+            committed = b + 1
+            forced = action in ("checkpoint", "evict")
+            if forced:
+                stats["straggler_events"] += 1
+                if on_event:
+                    on_event(f"straggler_{action}", b)
+            if committed % checkpoint_every == 0 or committed == n_batches \
+                    or forced:
+                eng.save(manager, committed)
+                manager.wait()
+                stats["checkpoints"] += 1
+            b += 1
+        except recoverable:
+            restarts += 1
+            stats["restarts"] += 1
+            if on_event:
+                on_event("restart", b)
+            if restarts > max_restarts:
+                raise
+            delay = backoff_delay(restarts, base=backoff_base,
+                                  factor=backoff_factor, cap=backoff_cap)
+            if delay > 0:
+                sleep_fn(delay)
+            if manager.latest_step() is None:
+                eng, resume = fresh(), 0
+            else:
+                eng, resume = StreamingConnectivity.restore(
+                    manager, options, fault_injector=fault_injector,
+                    **overrides)
+            stats["replayed_batches"] += b - resume
+            b = resume
+    return eng, stats
+
+
+class RecoveryStats(dict):
+    """Stats of a resilient distributed solve (dict with attr access)."""
+
+    def __getattr__(self, name):
+        try:
+            return self[name]
+        except KeyError as exc:
+            raise AttributeError(name) from exc
+
+
+def _elastic_edge_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Edge-sharding axes of an ``elastic_mesh``: everything but model."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def resilient_distributed_contour(
+    graph: Graph,
+    devices: Optional[Sequence] = None,
+    options: Optional[SolveOptions] = None,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    block_rounds: int = 8,
+    max_restarts: int = 5,
+    fault_injector: Optional[FaultInjector] = None,
+    manager=None,
+    straggler: Optional[StragglerMonitor] = None,
+    model_parallel: int = 1,
+    prefer_pods: int = 1,
+    backoff_base: float = 0.0,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    on_event: Optional[Callable[[str, int], None]] = None,
+    **overrides,
+) -> tuple[ComponentResult, RecoveryStats]:
+    """Distributed Contour that survives shard loss via elastic shrink.
+
+    Runs :func:`~repro.connectivity.distributed.distributed_contour` in
+    blocks of at most ``block_rounds`` global rounds.  Between blocks the
+    ``fault_injector`` is consulted at site ``"round"`` (in production:
+    the collective's failure detector):
+
+    * :class:`ShardLossFault` — drop the lost device(s), re-derive a
+      smaller mesh (``elastic_mesh``; the edge arrays are re-sharded by
+      the next block's ``device_put``), and resume warm from the last
+      good labels.  Sound because min-mapping labels are monotone
+      non-increasing with ``L[v]`` always inside ``v``'s component, so
+      any stale snapshot is a valid ``init_labels`` (module docstring).
+    * any other :class:`SimulatedFault` — plain warm restart on the same
+      mesh (from ``manager``'s last checkpoint when given, else the
+      in-memory labels), with exponential backoff.
+
+    A ``straggler`` monitor escalates per the ladder in
+    ``repro.runtime.straggler``: ``"checkpoint"`` forces a label
+    snapshot (when ``manager`` is given), ``"evict"`` drops one device
+    and shrinks — both recorded in the result's provenance.
+
+    Returns ``(result, stats)``; ``result.converged`` is True iff the
+    fixed point was reached within ``options.max_iters`` total rounds
+    across every block and restart.
+    """
+    opts = options if options is not None else SolveOptions()
+    if overrides:
+        opts = opts.replace(**overrides)
+    opts.validate()
+    if devices is None:
+        devices = (list(mesh.devices.flat) if mesh is not None
+                   else list(jax.devices()))
+    devices = list(devices)
+    if mesh is None:
+        mesh = elastic_mesh(model_parallel, devices, prefer_pods)
+        edge_axes = _elastic_edge_axes(mesh)
+    else:
+        edge_axes = tuple(opts.edge_axes)
+    max_total = opts.max_iters if opts.max_iters is not None else 10_000
+
+    stats = RecoveryStats(restarts=0, shrinks=0, checkpoints=0, blocks=0,
+                          mesh_history=[tuple(mesh.devices.shape)],
+                          events=[])
+    provenance: list = []
+    L = resolve_warm_start(opts.warm_start, graph.n_vertices)
+    if manager is not None and manager.latest_step() is not None:
+        state, _ = manager.restore({"labels": np.int64(0)})
+        L = jax.numpy.asarray(state["labels"], jax.numpy.int32)
+    iterations = 0
+    visited = 0.0
+    done = False
+    restarts = 0
+    block = 0
+
+    def record(event: str):
+        stats["events"].append((event, block))
+        if on_event:
+            on_event(event, block)
+
+    def shrink(n_lost: int, reason: str):
+        nonlocal devices, mesh, edge_axes
+        survivors = devices[:-n_lost] if n_lost else devices
+        new_mesh = elastic_mesh(model_parallel, survivors, prefer_pods)
+        provenance.append(f"{reason}:{len(devices)}->{len(survivors)}")
+        devices = survivors
+        mesh = new_mesh
+        edge_axes = _elastic_edge_axes(mesh)
+        stats["shrinks"] += 1
+        stats["mesh_history"].append(tuple(mesh.devices.shape))
+        record(reason)
+
+    while not done and iterations < max_total:
+        try:
+            if fault_injector is not None:
+                fault_injector.maybe_fail(block, "round")
+            if straggler is not None:
+                straggler.start_step()
+            labels, it, ok, v = dist.distributed_contour(
+                graph, mesh,
+                edge_axes=edge_axes,
+                local_rounds=opts.local_rounds,
+                max_iters=min(block_rounds, max_total - iterations),
+                async_compress=opts.async_compress,
+                backend=opts.backend,
+                init_labels=L,
+                sampling=opts.sampling,
+                compact_every=opts.compact_every)
+            action = (straggler.end_step() if straggler is not None
+                      else "ok")
+        except ShardLossFault as exc:
+            restarts += 1
+            stats["restarts"] += 1
+            if restarts > max_restarts:
+                raise
+            shrink(exc.n_lost, "elastic_shrink")
+            continue
+        except SimulatedFault:
+            restarts += 1
+            stats["restarts"] += 1
+            if restarts > max_restarts:
+                raise
+            delay = backoff_delay(restarts, base=backoff_base)
+            if delay > 0:
+                sleep_fn(delay)
+            if manager is not None and manager.latest_step() is not None:
+                state, _ = manager.restore({"labels": np.int64(0)})
+                L = jax.numpy.asarray(state["labels"], jax.numpy.int32)
+            record("restart")
+            continue
+        # commit the block: monotone labels make every block's output a
+        # valid warm start for the next
+        L = labels
+        iterations += int(it)
+        visited += float(v)
+        done = bool(ok)
+        stats["blocks"] += 1
+        if manager is not None and (action in ("checkpoint", "evict")
+                                    or done):
+            manager.save(block, {"labels": L})
+            manager.wait()
+            stats["checkpoints"] += 1
+            if action == "checkpoint":
+                record("straggler_checkpoint")
+        if action == "evict" and len(devices) - 1 >= model_parallel:
+            shrink(1, "straggler_evict")
+        block += 1
+
+    result = make_result(L, iterations, done, visited,
+                         provenance=provenance)
+    return result, stats

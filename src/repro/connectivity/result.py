@@ -37,6 +37,11 @@ class ComponentResult:
         (``iterations × m`` for dense edge-sweep schedules; strictly less
         under the ``sampling``/``compact_every`` frontier contraction —
         see ``repro.connectivity.frontier``).
+      provenance: static tuple of degradation/recovery events the solve
+        survived (e.g. ``"kernel_fallback:pallas_blocked->xla (...)"`` when
+        a Pallas launch failed and the XLA reference path answered, or
+        ``"elastic_shrink:8->7"`` from the resilient distributed driver).
+        None/empty means a clean solve — see DESIGN.md §12.
     """
 
     labels: jax.Array
@@ -44,18 +49,21 @@ class ComponentResult:
     converged: jax.Array
     batch_sizes: Optional[Tuple[int, ...]] = None
     edges_visited: Optional[jax.Array] = None
+    provenance: Optional[Tuple[str, ...]] = None
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
         children = (self.labels, self.iterations, self.converged,
                     self.edges_visited)
-        return children, self.batch_sizes
+        return children, (self.batch_sizes, self.provenance)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         labels, iterations, converged, edges_visited = children
+        batch_sizes, provenance = aux
         return cls(labels=labels, iterations=iterations, converged=converged,
-                   batch_sizes=aux, edges_visited=edges_visited)
+                   batch_sizes=batch_sizes, edges_visited=edges_visited,
+                   provenance=provenance)
 
     # -- lazy host-side views --------------------------------------------
     @property
@@ -142,6 +150,7 @@ class ComponentResult:
                 converged=self.converged[i],
                 edges_visited=(None if self.edges_visited is None
                                else self.edges_visited[i]),
+                provenance=self.provenance,
             )
             for i in range(n_graphs)
         ]

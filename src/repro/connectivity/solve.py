@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.connectivity import minmap
 from repro.connectivity.options import SolveOptions
+from repro.runtime.recovery import is_transient_error
 from repro.connectivity.registry import SolverSpec, get_solver
 from repro.connectivity.result import ComponentResult
 from repro.graphs.structs import Graph
@@ -81,13 +82,14 @@ def solver_output(out):
 
 
 def make_result(labels, iterations, converged, edges_visited=None,
-                batch_sizes=None) -> ComponentResult:
+                batch_sizes=None, provenance=None) -> ComponentResult:
     """Canonical dtype normalisation into a :class:`ComponentResult`.
 
     The single constructor funnel for ``solve``, ``solve_batch`` and the
     streaming engine's ``snapshot()``, so the result dtypes (int32
     iterations, bool converged, float32 work counter) cannot drift between
-    entry points.
+    entry points.  ``provenance`` is the static degradation/recovery
+    event tuple (empty/None = clean solve).
     """
     return ComponentResult(
         labels=labels,
@@ -95,7 +97,8 @@ def make_result(labels, iterations, converged, edges_visited=None,
         converged=jnp.asarray(converged, bool),
         batch_sizes=batch_sizes,
         edges_visited=(None if edges_visited is None
-                       else jnp.asarray(edges_visited, jnp.float32)))
+                       else jnp.asarray(edges_visited, jnp.float32)),
+        provenance=(tuple(provenance) if provenance else None))
 
 
 def _resolve(options: Optional[SolveOptions],
@@ -159,6 +162,22 @@ def solve(
     if init is not None and not spec.supports_warm_start:
         raise ValueError(f"solver {spec.name!r} does not support warm "
                          "starts")
-    labels, iterations, converged, edges_visited = solver_output(
-        spec.fn(graph, opts, init))
-    return make_result(labels, iterations, converged, edges_visited)
+    provenance = None
+    try:
+        out = spec.fn(graph, opts, init)
+    except Exception as exc:
+        # Graceful degradation (DESIGN.md §12): a failed non-XLA kernel
+        # launch (Pallas lowering/compile/launch error on a host without
+        # the toolchain) falls back to the XLA reference path instead of
+        # failing the request.  Caller bugs (ValueError/TypeError/...)
+        # and injected SimulatedFaults propagate untouched.
+        if (not opts.kernel_fallback or opts.backend == "xla"
+                or spec.runs_on != "device" or not is_transient_error(exc)):
+            raise
+        out = spec.fn(graph, opts.replace(backend="xla", plan=None), init)
+        provenance = (
+            f"kernel_fallback:{opts.backend}->xla "
+            f"({type(exc).__name__}: {str(exc)[:120]})",)
+    labels, iterations, converged, edges_visited = solver_output(out)
+    return make_result(labels, iterations, converged, edges_visited,
+                       provenance=provenance)

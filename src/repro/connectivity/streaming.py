@@ -76,6 +76,7 @@ from repro.connectivity.solve import _resolve, make_result, \
     resolve_warm_start, solve
 from repro.connectivity.solvers import resolve_backend_plan
 from repro.graphs.structs import Graph
+from repro.runtime.recovery import FaultInjector, is_transient_error
 
 # Smallest edge-store capacity / batch padding bucket.  Power of two so
 # amortised doubling keeps the number of distinct compiled shapes
@@ -189,9 +190,21 @@ class StreamingConnectivity:
         the engine's memory at O(n) for indefinite streams — the labels
         are a lossless summary of the partition, so queries and delta
         solves never need the history.
+      fault_injector: optional
+        :class:`~repro.runtime.recovery.FaultInjector` consulted inside
+        :meth:`ingest` at sites ``"pre"`` (before the delta solve) and
+        ``"post_write"`` (after the ring-buffer write, before the
+        commit) — the chaos-test hook proving ingest atomicity and
+        bit-exact crash recovery (DESIGN.md §12).
       **overrides: per-field :class:`SolveOptions` overrides, as for
         ``solve()``.
     """
+
+    # the checkpointable state (see state_dict); a stable key set is the
+    # restore contract, so bump thoughtfully
+    _STATE_KEYS = ("labels", "src", "dst", "m", "n", "n_cap", "n_batches",
+                   "iterations", "converged", "edges_visited",
+                   "store_edges")
 
     def __init__(
         self,
@@ -201,6 +214,7 @@ class StreamingConnectivity:
         warm_start: Union[None, ComponentResult, jax.Array] = None,
         min_capacity: int = MIN_CAPACITY,
         store_edges: bool = True,
+        fault_injector: Optional[FaultInjector] = None,
         **overrides,
     ):
         opts, spec = _resolve(options, overrides)
@@ -251,6 +265,10 @@ class StreamingConnectivity:
         self._converged = jnp.array(True)
         self._edges_visited = jnp.float32(0)
         self._snap: Optional[ComponentResult] = None
+        self.fault_injector = fault_injector
+        # degradation events survived by this stream (kernel fallbacks);
+        # surfaced through snapshot().provenance
+        self._provenance: list = []
 
     # -- introspection ---------------------------------------------------
     @property
@@ -379,54 +397,32 @@ class StreamingConnectivity:
                                   jnp.asarray(dst, jnp.int32), pad_k)
 
         # delta re-convergence: sweep only the new batch, warm-started.
-        # Runs before any state commit — and vertex growth rolls back on
-        # failure (surplus label capacity is invisible identity padding) —
-        # so a solve failure (backend compile error, OOM at a new bucket
-        # size) leaves the engine exactly as it was: ingest is atomic.
+        # Everything up to the scalar commit below runs inside the
+        # rollback guard — vertex growth rolls back on failure (surplus
+        # label capacity is invisible identity padding) and ring writes
+        # only ever touch slots >= _m, which no reader observes — so a
+        # failure anywhere (backend compile error, OOM at a new bucket
+        # size, an injected crash after the ring write) leaves the engine
+        # exactly as it was: ingest is atomic.
         try:
-            if self._opts.mesh is not None:
-                # supervertex rewrite (the single-device path does this
-                # inside delta_converge); self-loop padding maps to
-                # self-loops.  The replica spans the label *capacity* so
-                # its shape matches the resident labels.
-                L, it, done, visited = dist.distributed_contour(
-                    Graph(src=self._labels[src_p], dst=self._labels[dst_p],
-                          n_vertices=self._n_cap),
-                    self._opts.mesh,
-                    edge_axes=tuple(self._opts.edge_axes),
-                    local_rounds=self._opts.local_rounds,
-                    max_iters=self._opts.max_iters,
-                    async_compress=self._opts.async_compress,
-                    backend=self._opts.backend,
-                    init_labels=self._labels,
-                    sampling=self._opts.sampling,
-                    compact_every=self._opts.compact_every,
-                    n_active=k)
-            else:
-                backend, plan = resolve_backend_plan(self._n_cap, pad_k,
-                                                     self._opts)
-                L, it, done, visited = delta_converge(
-                    src_p, dst_p, self._labels, jnp.int32(k),
-                    variant=self._opts.variant,
-                    backend=backend,
-                    plan=plan,
-                    warmup=self._opts.warmup,
-                    async_compress=self._opts.async_compress,
-                    sampling=self._opts.sampling,
-                    compact_every=self._opts.compact_every,
-                    max_iters=self._opts.max_iters)
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_fail(self._n_batches, "pre")
+            L, it, done, visited = self._delta_solve(src_p, dst_p, pad_k, k)
+            if self._store_edges:
+                self._ensure_capacity(self._m + pad_k)
+                offset = jnp.int32(self._m)
+                self._src = _ring_write(self._src, src_p, offset)
+                self._dst = _ring_write(self._dst, dst_p, offset)
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_fail(self._n_batches, "post_write")
         except Exception:
             self._n = old_n
             self._snap = None
             raise
-        # commit: append into the ring store (padding slots hold
-        # self-loops; the next batch's write cursor starts at the real
-        # size and overwrites them), then fold the counters
-        if self._store_edges:
-            self._ensure_capacity(self._m + pad_k)
-            offset = jnp.int32(self._m)
-            self._src = _ring_write(self._src, src_p, offset)
-            self._dst = _ring_write(self._dst, dst_p, offset)
+        # commit: the ring store already holds the batch (padding slots
+        # hold self-loops; the next batch's write cursor starts at the
+        # real size and overwrites them) — publish the size, labels and
+        # counters in one uninterruptible run of scalar rebinds
         self._m += k
         self._labels = L
         self._iterations = self._iterations + jnp.asarray(it, jnp.int32)
@@ -436,6 +432,58 @@ class StreamingConnectivity:
         self._n_batches += 1
         self._snap = None
         return self
+
+    def _delta_solve(self, src_p, dst_p, pad_k: int, k: int):
+        """Run the per-batch delta solve, falling back to XLA on a failed
+        non-XLA kernel launch (recorded in the stream's provenance)."""
+        try:
+            return self._delta_solve_backend(src_p, dst_p, pad_k, k,
+                                             self._opts)
+        except Exception as exc:
+            if (not self._opts.kernel_fallback
+                    or self._opts.backend == "xla"
+                    or not is_transient_error(exc)):
+                raise
+            out = self._delta_solve_backend(
+                src_p, dst_p, pad_k, k,
+                self._opts.replace(backend="xla", plan=None))
+            self._provenance.append(
+                f"kernel_fallback:{self._opts.backend}->xla "
+                f"(batch {self._n_batches}, {type(exc).__name__}: "
+                f"{str(exc)[:120]})")
+            self._snap = None
+            return out
+
+    def _delta_solve_backend(self, src_p, dst_p, pad_k: int, k: int, opts):
+        if opts.mesh is not None:
+            # supervertex rewrite (the single-device path does this
+            # inside delta_converge); self-loop padding maps to
+            # self-loops.  The replica spans the label *capacity* so
+            # its shape matches the resident labels.
+            return dist.distributed_contour(
+                Graph(src=self._labels[src_p], dst=self._labels[dst_p],
+                      n_vertices=self._n_cap),
+                opts.mesh,
+                edge_axes=tuple(opts.edge_axes),
+                local_rounds=opts.local_rounds,
+                max_iters=opts.max_iters,
+                async_compress=opts.async_compress,
+                backend=opts.backend,
+                init_labels=self._labels,
+                sampling=opts.sampling,
+                compact_every=opts.compact_every,
+                n_active=k)
+        backend, plan = resolve_backend_plan(self._n_cap, pad_k, opts)
+        return delta_converge(
+            src_p, dst_p, self._labels, jnp.int32(k),
+            variant=opts.variant,
+            backend=backend,
+            plan=plan,
+            warmup=opts.warmup,
+            async_compress=opts.async_compress,
+            sampling=opts.sampling,
+            compact_every=opts.compact_every,
+            max_iters=opts.max_iters)
 
     def ingest_graph(self, graph: Graph,
                      validate: bool = True) -> "StreamingConnectivity":
@@ -457,7 +505,8 @@ class StreamingConnectivity:
         if self._snap is None:
             self._snap = make_result(self._labels[:self._n],
                                      self._iterations, self._converged,
-                                     self._edges_visited)
+                                     self._edges_visited,
+                                     provenance=self._provenance)
         return self._snap
 
     def same_component(self, u, v):
@@ -501,3 +550,117 @@ class StreamingConnectivity:
             self._edges_visited = self._edges_visited + res.edges_visited
         self._snap = None
         return self.snapshot()
+
+    # -- checkpointing (DESIGN.md §12) -----------------------------------
+    def state_dict(self) -> dict:
+        """The engine's complete checkpointable state, as a flat pytree.
+
+        Everything a restore needs to resume the stream bit-exactly: the
+        ring-buffered edge store, the converged label array (at capacity,
+        so the pow2 growth schedule replays identically), the logical
+        sizes, and the cumulative counters.  Every leaf is an array (or
+        NumPy scalar), so the dict round-trips through
+        ``CheckpointManager``'s atomic-rename ``.npy`` protocol
+        unchanged.
+
+        The edge-store leaves are *copies*: the live buffers are donated
+        to ``_ring_write`` on the next ingest, which would invalidate any
+        held reference — a snapshot must stay readable after the stream
+        moves on.
+        """
+        return {
+            "labels": self._labels,
+            "src": jnp.array(self._src),
+            "dst": jnp.array(self._dst),
+            "m": np.int64(self._m),
+            "n": np.int64(self._n),
+            "n_cap": np.int64(self._n_cap),
+            "n_batches": np.int64(self._n_batches),
+            "iterations": self._iterations,
+            "converged": self._converged,
+            "edges_visited": self._edges_visited,
+            "store_edges": np.bool_(self._store_edges),
+        }
+
+    @classmethod
+    def _state_like(cls) -> dict:
+        """Structure template for ``CheckpointManager.restore`` (only the
+        treedef is used; shapes/dtypes come from the manifest)."""
+        return {k: np.int64(0) for k in cls._STATE_KEYS}
+
+    def load_state_dict(self, state: dict) -> "StreamingConnectivity":
+        """Restore the engine to a :meth:`state_dict` snapshot in place.
+
+        Validates the structural invariants (capacity/size consistency)
+        so a corrupt or truncated checkpoint fails loudly instead of
+        answering queries from inconsistent state.
+        """
+        missing = set(self._STATE_KEYS) - set(state)
+        if missing:
+            raise ValueError(f"checkpoint state is missing {sorted(missing)}")
+        n = int(state["n"])
+        n_cap = int(state["n_cap"])
+        m = int(state["m"])
+        labels = jnp.asarray(state["labels"], jnp.int32)
+        # copy the edge store (jnp.array, not asarray): the engine will
+        # donate these buffers to _ring_write, which must not invalidate
+        # the caller's state dict
+        src = jnp.array(state["src"]).astype(jnp.int32)
+        dst = jnp.array(state["dst"]).astype(jnp.int32)
+        if labels.shape != (n_cap,) or not 0 <= n <= n_cap:
+            raise ValueError(
+                f"corrupt checkpoint: labels shape {labels.shape} vs "
+                f"n={n}, n_cap={n_cap}")
+        if src.shape != dst.shape or (bool(state["store_edges"])
+                                      and m > src.shape[0]):
+            raise ValueError(
+                f"corrupt checkpoint: edge store {src.shape}/{dst.shape} "
+                f"cannot hold m={m}")
+        self._n, self._n_cap, self._m = n, n_cap, m
+        self._labels = labels
+        self._src, self._dst = src, dst
+        self._store_edges = bool(state["store_edges"])
+        self._n_batches = int(state["n_batches"])
+        self._iterations = jnp.asarray(state["iterations"], jnp.int32)
+        self._converged = jnp.asarray(state["converged"], bool)
+        self._edges_visited = jnp.asarray(state["edges_visited"],
+                                          jnp.float32)
+        self._snap = None
+        return self
+
+    def save(self, manager, step: Optional[int] = None) -> int:
+        """Checkpoint the stream through ``manager`` (atomic rename).
+
+        ``step`` defaults to :attr:`n_batches` — the number of committed
+        batches — so the crash-restart driver's convention "checkpoint
+        step k == resume at batch k" holds without bookkeeping.  Returns
+        the step written.
+        """
+        if step is None:
+            step = self._n_batches
+        manager.save(int(step), self.state_dict())
+        return int(step)
+
+    @classmethod
+    def restore(
+        cls,
+        manager,
+        options: Optional[SolveOptions] = None,
+        *,
+        step: Optional[int] = None,
+        fault_injector: Optional[FaultInjector] = None,
+        **overrides,
+    ) -> tuple["StreamingConnectivity", int]:
+        """Rebuild an engine from a checkpoint written by :meth:`save`.
+
+        ``options`` (plus ``**overrides``) are *not* checkpointed —
+        solver configuration may legitimately change across a restart
+        (e.g. an elastic mesh over fewer devices) — so pass the same
+        options to resume identically.  Returns ``(engine, step)``.
+        """
+        state, step = manager.restore(cls._state_like(), step)
+        eng = cls(int(state["n"]), options,
+                  store_edges=bool(state["store_edges"]),
+                  fault_injector=fault_injector, **overrides)
+        eng.load_state_dict(state)
+        return eng, int(step)

@@ -212,6 +212,45 @@ class StreamingDedup:
         """True iff ``doc_id`` is not its cluster's representative."""
         return int(self._engine.component_of(doc_id)) != int(doc_id)
 
+    # -- checkpointing (DESIGN.md §12) -----------------------------------
+    def state_dict(self) -> dict:
+        """Full checkpointable state: LSH buckets + the engine's state.
+
+        The per-band bucket dicts are packed into one ``[P, 3]``
+        ``(band, key, representative)`` array so the whole thing is a
+        flat array pytree for ``CheckpointManager``; the nested
+        ``"engine"`` entry is the connectivity engine's own
+        :meth:`~repro.connectivity.StreamingConnectivity.state_dict`.
+        """
+        triples = [(b, k, rep)
+                   for b, bucket in enumerate(self._buckets)
+                   for k, rep in bucket.items()]
+        return {
+            "buckets": np.asarray(triples, np.int64).reshape(-1, 3),
+            "n_docs": np.int64(self._n_docs),
+            "n_pairs": np.int64(self._n_pairs),
+            "engine": self._engine.state_dict(),
+        }
+
+    def load_state_dict(self, state: dict) -> "StreamingDedup":
+        """Restore to a :meth:`state_dict` snapshot in place (the MinHash
+        parameters are construction-time config, not state — build the
+        instance with the same ``n_hashes``/``bands``/``shingle``/
+        ``seed`` to resume identically)."""
+        buckets: List[Dict[int, int]] = [dict() for _ in range(self._bands)]
+        for band, key, rep in np.asarray(state["buckets"],
+                                         np.int64).reshape(-1, 3):
+            if not 0 <= band < self._bands:
+                raise ValueError(
+                    f"corrupt checkpoint: band {band} outside "
+                    f"[0, {self._bands})")
+            buckets[int(band)][int(key)] = int(rep)
+        self._buckets = buckets
+        self._n_docs = int(state["n_docs"])
+        self._n_pairs = int(state["n_pairs"])
+        self._engine.load_state_dict(state["engine"])
+        return self
+
     def report(self) -> DedupReport:
         """Cumulative :class:`DedupReport` over everything streamed."""
         labels = self.labels()

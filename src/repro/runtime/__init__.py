@@ -1,8 +1,16 @@
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.elastic import derive_mesh_shape, elastic_mesh
-from repro.runtime.recovery import run_with_recovery, FaultInjector
+from repro.runtime.recovery import (
+    FaultInjector,
+    ShardLossFault,
+    SimulatedFault,
+    backoff_delay,
+    is_transient_error,
+    run_with_recovery,
+)
 
 __all__ = [
     "StragglerMonitor", "derive_mesh_shape", "elastic_mesh",
-    "run_with_recovery", "FaultInjector",
+    "run_with_recovery", "FaultInjector", "ShardLossFault",
+    "SimulatedFault", "backoff_delay", "is_transient_error",
 ]

@@ -1,0 +1,87 @@
+"""Edge cases of ``repro.runtime.elastic`` mesh re-derivation.
+
+The elastic shrink path (``connectivity.resilience``) calls these under
+fire — after shard loss — so the degenerate shapes (1-wide data axis,
+non-dividing pod preference, too few devices) must be exact, not
+approximate.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.connectivity import SolveOptions, solve
+from repro.connectivity.distributed import distributed_contour
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle
+from repro.runtime.elastic import derive_mesh_shape, elastic_mesh
+
+
+def test_one_wide_data_axis():
+    """All devices consumed by the model axis: data axis degrades to 1
+    (the mesh is still well-formed, just no data parallelism left)."""
+    assert derive_mesh_shape(4, 4) == (1, 4)
+    assert derive_mesh_shape(16, 16) == (1, 16)
+    # one spare replica short of 2-wide: still (1, model)
+    assert derive_mesh_shape(31, 16) == (1, 16)
+    # prefer_pods cannot split a single replica
+    assert derive_mesh_shape(4, 4, prefer_pods=2) == (1, 4)
+
+
+def test_prefer_pods_not_dividing_replicas():
+    """Pod preference decays to the largest feasible divisor, never
+    drops devices that a smaller pod count could use."""
+    # 32 replicas, prefer 3 pods: 3 does not divide 32 -> falls to 2
+    assert derive_mesh_shape(512, 16, prefer_pods=3) == (2, 16, 16)
+    # 10 replicas, prefer 4: 4 and 3 fail, 2 divides
+    assert derive_mesh_shape(40, 4, prefer_pods=4) == (2, 5, 4)
+    # 7 replicas (prime), prefer 4: only 1 pod fits -> 2-axis shape
+    assert derive_mesh_shape(7, 1, prefer_pods=4) == (7, 1)
+    # prefer_pods equal to replicas: every replica its own pod
+    assert derive_mesh_shape(12, 2, prefer_pods=6) == (6, 1, 2)
+
+
+def test_derive_mesh_shape_raises_when_model_axis_does_not_fit():
+    with pytest.raises(ValueError, match="model_parallel"):
+        derive_mesh_shape(3, 4)
+    with pytest.raises(ValueError, match="model_parallel"):
+        derive_mesh_shape(0, 1)
+
+
+def test_shrink_sequence_monotone():
+    """Losing devices one at a time never raises until the model axis no
+    longer fits, and the device budget is always respected."""
+    for n in range(16, 3, -1):
+        shape = derive_mesh_shape(n, 4)
+        assert int(np.prod(shape)) <= n
+        assert shape[-1] == 4
+    with pytest.raises(ValueError):
+        derive_mesh_shape(3, 4)
+
+
+def test_elastic_mesh_single_device_runs_distributed_solve():
+    """The smallest elastic mesh (1 CPU device) is a real mesh the
+    distributed solver accepts — the shrink path's terminal state."""
+    mesh = elastic_mesh(1, jax.devices())
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (len(jax.devices()), 1)
+    g = gen.components_mix([gen.path(200, seed=1), gen.rmat(8, seed=2)],
+                           seed=3)
+    oracle = connected_components_oracle(*g.to_numpy())
+    labels, it, done, visited = distributed_contour(g, mesh,
+                                                    edge_axes=("data",))
+    assert bool(done)
+    assert (np.asarray(labels) == oracle).all()
+
+
+def test_elastic_mesh_too_few_devices_raises():
+    with pytest.raises(ValueError, match="model_parallel"):
+        elastic_mesh(len(jax.devices()) + 1, jax.devices())
+
+
+def test_elastic_mesh_discards_surplus_devices():
+    """With prefer_pods=1 and model_parallel=1 every device is used; the
+    reshape must match the derived shape exactly."""
+    devs = jax.devices()
+    mesh = elastic_mesh(1, devs, prefer_pods=1)
+    assert mesh.devices.size == len(devs)
+    assert tuple(mesh.devices.shape) == derive_mesh_shape(len(devs), 1)
