@@ -1,9 +1,12 @@
-"""Sanity-gate a ``BENCH_connectivity.json`` artifact.
+"""Sanity-gate committed benchmark artifacts.
 
 Run in CI (and locally after ``python -m benchmarks.run``) so the
-committed perf artifact cannot silently rot::
+committed perf artifacts cannot silently rot::
 
-    python benchmarks/check_artifact.py [BENCH_connectivity.json]
+    python benchmarks/check_artifact.py [BENCH_connectivity.json ...]
+
+Each path dispatches on its ``artifact`` field: ``"connectivity"``
+(default when absent) or ``"serving"`` (``BENCH_serving.json``).
 
 Fails (exit 1) when:
 
@@ -23,6 +26,17 @@ Fails (exit 1) when:
   injected crashes (restore + replay through the crash-restart driver)
   must land bit-identical to the fault-free stream with cumulative
   ``edges_visited`` under 2x the clean run (DESIGN.md §12).
+
+For serving artifacts, fails when:
+
+* the SLO gate regressed — p50/p99 latency above threshold, throughput
+  below the floor, or any request failed (DESIGN.md §13);
+* a non-``fast`` artifact answered fewer than 1M queries;
+* the recovery gate regressed — the crash-restarted engine lost an
+  acknowledged ingest, produced labels that are not bit-identical to
+  the clean run, or never actually restarted;
+* the coalescer stopped coalescing — the batch-size histogram shows no
+  batch beyond a single request.
 
 Stdlib-only on purpose: the gate must run before (or without) the package
 environment, e.g. as a bare CI step.
@@ -79,26 +93,107 @@ def check(payload: dict) -> list:
     return errors
 
 
-def main(argv) -> int:
-    path = argv[1] if len(argv) > 1 else "BENCH_connectivity.json"
+def check_serving(payload: dict) -> list:
+    """Gate a ``BENCH_serving.json`` artifact (empty list = sane)."""
+    errors = []
+    summary = payload.get("summary", {})
+    slo = payload.get("slo", {})
+    results = payload.get("results", {})
+    recovery = payload.get("recovery", {})
+    if not summary or not slo or not results:
+        return ["serving artifact is missing summary/slo/results sections"]
+    if not slo.get("passed", False):
+        errors.append(
+            f"serving SLO gate failed: p50={summary.get('p50_ms')}ms "
+            f"(<= {slo.get('p50_ms')}), p99={summary.get('p99_ms')}ms "
+            f"(<= {slo.get('p99_ms')}), qps={summary.get('throughput_qps')} "
+            f"(>= {slo.get('min_qps')}), failures={results.get('failures')}")
+    # re-derive instead of trusting the stored boolean
+    lat = results.get("latency_ms", {})
+    if lat.get("p50", 1e18) > slo.get("p50_ms", 0) or \
+            lat.get("p99", 1e18) > slo.get("p99_ms", 0):
+        errors.append(
+            f"serving latency exceeds SLO: p50={lat.get('p50')}ms, "
+            f"p99={lat.get('p99')}ms vs {slo}")
+    if results.get("throughput_qps", 0) < slo.get("min_qps", 1e18):
+        errors.append(
+            f"serving throughput {results.get('throughput_qps')} qps below "
+            f"SLO floor {slo.get('min_qps')}")
+    if results.get("failures", 1):
+        errors.append(
+            f"serving workload had {results.get('failures')} failed requests")
+    if not payload.get("fast") and \
+            summary.get("n_queries", 0) < 1_000_000:
+        errors.append(
+            f"non-fast serving artifact answered only "
+            f"{summary.get('n_queries')} queries (< 1,000,000)")
+    if recovery.get("acked_ingest_loss", 1) != 0:
+        errors.append(
+            f"serving recovery lost {recovery.get('acked_ingest_loss')} "
+            f"acknowledged ingests "
+            f"({recovery.get('acked_ingests')}/"
+            f"{recovery.get('expected_ingests')})")
+    if not recovery.get("bit_identical", False):
+        errors.append(
+            "serving recovery labels are not bit-identical to the clean run "
+            f"(crc32 clean={recovery.get('labels_crc32_clean')} vs "
+            f"recovered={recovery.get('labels_crc32_recovered')})")
+    if recovery.get("restarts", 0) < 1:
+        errors.append(
+            "serving recovery gate never restarted the engine — the crash "
+            "injection is not exercising the recovery path")
+    hist = results.get("batch_size_hist", {})
+    if not any(int(k) > 1 for k, v in hist.items() if v):
+        errors.append(
+            f"serving coalescer produced no multi-request batch "
+            f"(batch_size_hist={hist})")
+    return errors
+
+
+CHECKERS = {"connectivity": check, "serving": check_serving}
+
+
+def check_path(path: str) -> int:
     with open(path) as f:
         payload = json.load(f)
-    errors = check(payload)
+    kind = payload.get("artifact", "connectivity")
+    checker = CHECKERS.get(kind)
+    if checker is None:
+        print(f"ARTIFACT GATE FAILED: {path}: unknown artifact kind "
+              f"{kind!r}", file=sys.stderr)
+        return 1
+    errors = checker(payload)
     if errors:
         for e in errors:
-            print(f"ARTIFACT GATE FAILED: {e}", file=sys.stderr)
+            print(f"ARTIFACT GATE FAILED: {path}: {e}", file=sys.stderr)
         return 1
     summary = payload["summary"]
-    print(f"artifact gate ok: {path} "
-          f"(schema {payload.get('schema')}, {summary.get('n_graphs')} "
-          f"graphs, all_correct={summary.get('all_correct')}, "
-          f"frontier_visits_fewer_edges="
-          f"{summary.get('frontier_visits_fewer_edges')}, "
-          f"streaming_bit_identical="
-          f"{summary.get('streaming_bit_identical')}, "
-          f"recovery_bit_identical="
-          f"{summary.get('recovery_bit_identical')})")
+    if kind == "serving":
+        print(f"artifact gate ok: {path} "
+              f"(schema {payload.get('schema')}, "
+              f"{summary.get('n_queries'):,} queries, "
+              f"p50={summary.get('p50_ms'):.1f}ms, "
+              f"p99={summary.get('p99_ms'):.1f}ms, "
+              f"qps={summary.get('throughput_qps'):,.0f}, "
+              f"recovery_bit_identical="
+              f"{summary.get('recovery_bit_identical')}, "
+              f"acked_ingest_loss={summary.get('acked_ingest_loss')})")
+    else:
+        print(f"artifact gate ok: {path} "
+              f"(schema {payload.get('schema')}, {summary.get('n_graphs')} "
+              f"graphs, all_correct={summary.get('all_correct')}, "
+              f"frontier_visits_fewer_edges="
+              f"{summary.get('frontier_visits_fewer_edges')}, "
+              f"streaming_bit_identical="
+              f"{summary.get('streaming_bit_identical')}, "
+              f"recovery_bit_identical="
+              f"{summary.get('recovery_bit_identical')})")
     return 0
+
+
+def main(argv) -> int:
+    paths = argv[1:] or ["BENCH_connectivity.json"]
+    return max(check_path(p) for p in paths)
 
 
 if __name__ == "__main__":

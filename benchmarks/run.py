@@ -11,6 +11,7 @@ roofline reports:
   dist  distributed shard_map contour      (paper §IV-G analogue)
   dedup MinHash+Contour dedup integration
   roof  dry-run roofline tables            (EXPERIMENTS.md §Roofline)
+  serve serving-engine traffic + recovery  (DESIGN.md §13)
 
 After the sections run, the connectivity suite records (per-method wall
 time + iteration counts, including the ``C-2-blk`` kernel path) are
@@ -35,6 +36,7 @@ from benchmarks import (
     recovery,
     roofline_report,
     scaling_delaunay,
+    serving,
     streaming,
 )
 
@@ -49,6 +51,8 @@ SECTIONS = [
     ("streaming_vs_scratch", streaming.main),
     ("recovery_overhead", recovery.main),
     ("roofline_report", roofline_report.main),
+    # writes BENCH_serving.json itself (traffic SLO + recovery gate)
+    ("serving_engine", serving.main),
 ]
 
 

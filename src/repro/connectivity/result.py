@@ -100,15 +100,22 @@ class ComponentResult:
         """Vertex count per component, indexed like :meth:`compact_labels`."""
         return self._uniq[2]
 
-    @staticmethod
-    def _check_ids(*ids):
-        # NumPy would silently wrap negative ids to the array tail — the
-        # same silently-wrong-component failure mode the negative
-        # warm-start validation exists for (out-of-range positives raise
-        # on their own)
+    def _check_ids(self, *ids):
+        # NumPy would silently wrap negative ids to the array tail, and
+        # any jax-array indexing path *clamps* out-of-range ids to a
+        # valid index and answers for the wrong vertex — the same
+        # silently-wrong-component failure mode the negative warm-start
+        # validation exists for.  Both bounds are checked eagerly so
+        # every query surface fails the same loud way.
+        n = self._np_labels.shape[-1]
         for v in ids:
-            if np.any(np.asarray(v) < 0):
+            a = np.asarray(v)
+            if np.any(a < 0):
                 raise IndexError("vertex ids must be >= 0")
+            if a.size and np.any(a >= n):
+                raise IndexError(
+                    f"vertex id {int(a.max())} out of range for "
+                    f"n_vertices={n}")
 
     def same_component(self, u, v):
         """True iff ``u`` and ``v`` are connected (vectorises over arrays)."""

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.model import build_model
+from repro.serving.primitives import BoundedQueue, SlotPool
 
 
 @dataclasses.dataclass
@@ -40,6 +41,11 @@ class BatchedServer:
     prefilled one by one and stacked into the slot dimension.  This mirrors
     the cache layout of the decode dry-run cells, so the serving path and
     the production lowering agree.
+
+    Admission and slot management use the shared serving primitives
+    (``repro.serving.primitives``) — the same queue/slot idiom the
+    connectivity engine is built on, so the repo has one queueing
+    vocabulary across both servers.
     """
 
     def __init__(self, config, params=None, *, n_slots: int = 4,
@@ -73,23 +79,35 @@ class BatchedServer:
 
     def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Run all requests to completion; returns rid -> generated tokens."""
-        queue = list(requests)
+        admission = BoundedQueue(name="admission")   # serve-to-completion
+        for req in requests:
+            admission.put(req)
+        slots = SlotPool(self.n_slots)
         active: List[Optional[Request]] = [None] * self.n_slots
         caches: List[Any] = [None] * self.n_slots
 
+        def retire(s: int) -> None:
+            active[s].done = True
+            active[s] = caches[s] = None
+            slots.release(s)
+
         def admit():
-            for s in range(self.n_slots):
-                if active[s] is None and queue:
-                    req = queue.pop(0)
-                    tok, cache = self._prefill_one(req)
-                    req.out_tokens.append(tok)
-                    active[s], caches[s] = req, cache
-                    if len(req.out_tokens) >= req.max_new_tokens:
-                        req.done = True
-                        active[s] = caches[s] = None
+            # freed decode slots take the next queued request (continuous
+            # batching): acquire hands out the lowest free slot until the
+            # pool or the queue is exhausted
+            while len(admission):
+                s = slots.acquire()
+                if s is None:
+                    return
+                req = admission.get_nowait()
+                tok, cache = self._prefill_one(req)
+                req.out_tokens.append(tok)
+                active[s], caches[s] = req, cache
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    retire(s)
 
         admit()
-        while any(a is not None for a in active) or queue:
+        while slots.n_busy or len(admission):
             # batched decode over occupied slots (slot-by-slot caches are
             # decoded per-slot here; the production decode cell lowers the
             # fully stacked version — same math, batch=slots)
@@ -102,8 +120,7 @@ class BatchedServer:
                 tok = int(jnp.argmax(logits[0, -1]))
                 req.out_tokens.append(tok)
                 if len(req.out_tokens) >= req.max_new_tokens:
-                    req.done = True
-                    active[s] = caches[s] = None
+                    retire(s)
             admit()
         return {r.rid: r.out_tokens for r in requests}
 

@@ -1,0 +1,36 @@
+"""Connectivity-as-a-service: async request-batching over the stream.
+
+Public surface::
+
+    from repro.serving import ConnectivityEngine, ConnectivityClient
+
+    with ConnectivityEngine(n_vertices=1_000_000) as eng:
+        client = ConnectivityClient(eng)
+        client.ingest(src, dst)                 # blocks for the ack
+        client.same_component(0, 42)            # coalesced device gather
+
+See DESIGN.md §13 for the architecture (queues, coalescing, compile-
+cache buckets, backpressure, recovery story) and
+``repro.serving.simulate`` for the heavy-traffic harness behind
+``BENCH_serving.json``.
+"""
+from repro.serving.client import ConnectivityClient
+from repro.serving.engine import (ConnectivityEngine, DeadlineExceeded,
+                                  EngineClosed, IngestAck)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.primitives import (BoundedQueue, QueueFull, ServeRequest,
+                                      SlotPool, pow2_bucket)
+
+__all__ = [
+    "BoundedQueue",
+    "ConnectivityClient",
+    "ConnectivityEngine",
+    "DeadlineExceeded",
+    "EngineClosed",
+    "IngestAck",
+    "QueueFull",
+    "ServeRequest",
+    "ServingMetrics",
+    "SlotPool",
+    "pow2_bucket",
+]

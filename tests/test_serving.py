@@ -1,0 +1,597 @@
+"""Serving-engine suite: coalescing, backpressure, isolation, recovery.
+
+The concurrency stress tests lean on two structural facts:
+
+* connectivity is **monotone** — components only ever merge, so for a
+  fixed vertex pair the true answer over the stream's committed
+  prefixes goes ``False... -> True...`` and never back.  An engine with
+  snapshot isolation (every answer from some committed prefix, prefixes
+  observed in commit order per FIFO observer) must therefore produce a
+  monotone answer sequence per observer; a ``True -> False`` flip would
+  prove a read of rolled-back or mid-ingest state.
+* ingest is **atomic** — a poisoned batch (fault injected after the
+  ring write, before the commit) must never be visible to any
+  concurrent reader, at any point, ever.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.connectivity import StreamingConnectivity, solve
+from repro.graphs.structs import Graph
+from repro.runtime.recovery import FaultInjector, SimulatedFault
+from repro.serving import (BoundedQueue, ConnectivityClient,
+                           ConnectivityEngine, DeadlineExceeded,
+                           EngineClosed, QueueFull, SlotPool, pow2_bucket)
+from repro.serving.simulate import WorkloadSpec, run_simulation
+
+pytestmark = pytest.mark.serving
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+class TestPrimitives:
+    def test_pow2_bucket(self):
+        assert [pow2_bucket(k) for k in (1, 2, 3, 5, 64, 65)] == \
+            [1, 2, 4, 8, 64, 128]
+        assert pow2_bucket(3, lo=64) == 64
+        assert pow2_bucket(0) == 1
+
+    def test_bounded_queue_fifo_and_reject(self):
+        q = BoundedQueue(maxsize=2, name="test")
+        q.put("a")
+        q.put("b", retry_after=0.25)
+        with pytest.raises(QueueFull) as ei:
+            q.put("c", retry_after=0.25)
+        assert ei.value.retry_after == 0.25
+        assert ei.value.name == "test"
+        assert q.drain() == ["a", "b"]
+        assert q.get_nowait() is None
+
+    def test_bounded_queue_drain_bound(self):
+        q = BoundedQueue()
+        for i in range(10):
+            q.put(i)
+        assert q.drain(3) == [0, 1, 2]
+        assert len(q) == 7
+        assert q.drain() == list(range(3, 10))
+
+    def test_bounded_queue_get_batch_timeout(self):
+        q = BoundedQueue()
+        t0 = time.perf_counter()
+        assert q.get_batch(8, timeout=0.05) == []
+        assert time.perf_counter() - t0 >= 0.04
+        q.put(1)
+        assert q.get_batch(8, timeout=0.05) == [1]
+
+    def test_slot_pool(self):
+        pool = SlotPool(3)
+        assert [pool.acquire() for _ in range(3)] == [0, 1, 2]
+        assert pool.acquire() is None
+        assert pool.n_busy == 3
+        pool.release(1)
+        assert pool.acquire() == 1
+        with pytest.raises(ValueError):
+            pool.release(7)
+        pool.release(0)
+        with pytest.raises(ValueError):
+            pool.release(0)   # double release
+
+    def test_slot_pool_lowest_first(self):
+        pool = SlotPool(4)
+        a, b = pool.acquire(), pool.acquire()
+        pool.release(a)
+        assert pool.acquire() == a   # lowest free id again
+        del b
+
+
+# ---------------------------------------------------------------------------
+# engine basics
+# ---------------------------------------------------------------------------
+def _chain_batches(lo, hi, step):
+    """Edge micro-batches forming the path lo - lo+1 - ... - hi-1."""
+    src = np.arange(lo, hi - 1, dtype=np.int32)
+    return [(src[i:i + step], src[i:i + step] + 1)
+            for i in range(0, src.shape[0], step)]
+
+
+class TestEngineBasics:
+    def test_queries_match_oracle(self, rng):
+        n, m = 300, 600
+        src = rng.integers(0, n, m).astype(np.int32)
+        dst = rng.integers(0, n, m).astype(np.int32)
+        oracle = solve(Graph(src=src, dst=dst, n_vertices=n))
+        with ConnectivityEngine(n_vertices=n) as eng:
+            c = ConnectivityClient(eng)
+            for i in range(0, m, 100):
+                ack = c.ingest(src[i:i + 100], dst[i:i + 100])
+            assert ack.batch_index == 5 and ack.n_edges == m
+            assert c.n_components() == oracle.n_components
+            pairs = rng.integers(0, n, (50, 2))
+            for u, v in pairs:
+                assert c.same_component(int(u), int(v)) == \
+                    bool(oracle.same_component(int(u), int(v)))
+                assert c.component_of(int(u)) == oracle.component_of(int(u))
+        np.testing.assert_array_equal(np.asarray(eng.snapshot().labels),
+                                      np.asarray(oracle.labels))
+
+    def test_coalescing_batches_queries(self):
+        with ConnectivityEngine(n_vertices=256) as eng:
+            c = ConnectivityClient(eng)
+            c.ingest(np.arange(0, 100, dtype=np.int32),
+                     np.arange(1, 101, dtype=np.int32))
+            futs = [c.same_component_async(i, i + 1) for i in range(99)]
+            assert all(f.result(30) for f in futs)
+            eng.flush()
+            # 99 queries must have ridden far fewer coalesced gathers
+            assert eng.metrics.count("query_batches") < 30
+            assert eng.metrics.count("queries_answered") == 99
+            assert eng.metrics.batch_sizes.total >= 1
+
+    def test_ingest_visible_after_ack(self):
+        # read-your-writes: an acked batch must be visible to the next
+        # query — ack means committed
+        with ConnectivityEngine(n_vertices=64) as eng:
+            c = ConnectivityClient(eng)
+            assert not c.same_component(10, 11)
+            c.ingest([10], [11])
+            assert c.same_component(10, 11)
+
+    def test_vertex_growth_through_engine(self):
+        with ConnectivityEngine(n_vertices=8) as eng:
+            c = ConnectivityClient(eng)
+            ack = c.ingest([7, 12], [12, 13], n_vertices=16)
+            assert ack.n_vertices == 16
+            assert c.same_component(7, 13)
+
+    def test_out_of_range_query_rejected_not_clamped(self):
+        with ConnectivityEngine(n_vertices=32) as eng:
+            c = ConnectivityClient(eng)
+            c.ingest([0], [31])
+            with pytest.raises(IndexError, match="out of range"):
+                c.component_of(32)
+            with pytest.raises(IndexError, match="out of range"):
+                c.same_component(0, 100)
+            with pytest.raises(IndexError):
+                c.same_component(-1, 0)
+            # the engine survives rejected queries
+            assert c.same_component(0, 31)
+
+    def test_bad_ingest_fails_request_not_engine(self):
+        with ConnectivityEngine(n_vertices=16) as eng:
+            c = ConnectivityClient(eng)
+            with pytest.raises(ValueError, match="n_vertices"):
+                c.ingest([0], [99])        # out-of-range endpoint
+            ack = c.ingest([0], [1])       # engine still serving
+            assert ack.batch_index == 0
+            assert c.same_component(0, 1)
+
+    def test_submit_after_close_raises(self):
+        eng = ConnectivityEngine(n_vertices=8).start()
+        eng.close()
+        with pytest.raises(EngineClosed):
+            eng.submit_query("same_component", 0, 1)
+        with pytest.raises(EngineClosed):
+            eng.submit_ingest([0], [1])
+
+    def test_close_drains_pending(self):
+        eng = ConnectivityEngine(n_vertices=8)
+        fut = eng.submit_query("n_components")
+        eng.start()
+        eng.close()                        # default drain=True
+        assert fut.result(timeout=1) == 8
+
+    def test_n_components_query_validation(self):
+        eng = ConnectivityEngine(n_vertices=8)
+        with pytest.raises(ValueError):
+            eng.submit_query("n_components", 1)
+        with pytest.raises(ValueError):
+            eng.submit_query("component_of", 1, 2)
+        with pytest.raises(ValueError):
+            eng.submit_query("nope", 1, 2)
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# backpressure / deadlines / cancellation
+# ---------------------------------------------------------------------------
+class TestFlowControl:
+    def test_query_backpressure_rejects_with_retry_after(self):
+        eng = ConnectivityEngine(n_vertices=16, max_pending_queries=4)
+        # worker not started: the queue can only fill
+        for _ in range(4):
+            eng.submit_query("n_components")
+        with pytest.raises(QueueFull) as ei:
+            eng.submit_query("n_components")
+        assert ei.value.retry_after >= 0.0
+        assert eng.metrics.count("rejected") == 1
+        eng.start()
+        eng.close()
+
+    def test_ingest_backpressure(self):
+        eng = ConnectivityEngine(n_vertices=16, max_pending_ingests=2)
+        eng.submit_ingest([0], [1])
+        eng.submit_ingest([1], [2])
+        with pytest.raises(QueueFull):
+            eng.submit_ingest([2], [3])
+        eng.start()
+        eng.close()
+        assert eng.n_batches == 2
+
+    def test_client_retries_through_backpressure(self):
+        eng = ConnectivityEngine(n_vertices=16, max_pending_queries=2)
+        eng.submit_query("n_components")
+        eng.submit_query("n_components")
+        sleeps = []
+
+        def sleep_then_start(dt):
+            sleeps.append(dt)
+            eng.start()               # drain begins; retry will fit
+            time.sleep(0.01)
+
+        c = ConnectivityClient(eng, retries=50, retry_sleep=sleep_then_start)
+        assert c.n_components() == 16
+        assert len(sleeps) >= 1
+        eng.close()
+
+    def test_client_retry_budget_exhausted(self):
+        eng = ConnectivityEngine(n_vertices=16, max_pending_queries=1)
+        eng.submit_query("n_components")
+        c = ConnectivityClient(eng, retries=2, retry_sleep=lambda dt: None)
+        with pytest.raises(QueueFull):
+            c.n_components()
+        eng.start()
+        eng.close()
+
+    def test_deadline_exceeded(self):
+        eng = ConnectivityEngine(n_vertices=16)
+        fut = eng.submit_query("same_component", 0, 1, timeout=0.01)
+        time.sleep(0.05)              # deadline passes while queued
+        eng.start()
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=5)
+        eng.flush()
+        assert eng.metrics.count("deadline_missed") == 1
+        eng.close()
+
+    def test_cancellation_while_queued(self):
+        eng = ConnectivityEngine(n_vertices=16)
+        fut = eng.submit_query("same_component", 0, 1)
+        assert fut.cancel()
+        eng.start()
+        eng.flush()
+        assert fut.cancelled()
+        assert eng.metrics.count("cancelled") == 1
+        assert eng.metrics.count("queries_answered") == 0
+        eng.close()
+
+    def test_queue_depth_and_visibility_metrics(self):
+        with ConnectivityEngine(n_vertices=64) as eng:
+            c = ConnectivityClient(eng)
+            for lo in range(0, 30, 10):
+                c.ingest(np.arange(lo, lo + 9, dtype=np.int32),
+                         np.arange(lo + 1, lo + 10, dtype=np.int32))
+            c.map_component_of(range(30))
+            eng.flush()
+        s = eng.metrics.summary(wall_s=1.0)
+        assert s["counters"]["ingests_committed"] == 3
+        assert s["ingest_visibility_ms"]["count"] == 3
+        assert s["ingest_visibility_ms"]["p99"] > 0
+        assert s["latency_ms"]["count"] == 30
+        assert s["throughput_qps"] == 30.0
+        assert s["queue_depth_hist"]["query"]   # sampled at least once
+
+
+# ---------------------------------------------------------------------------
+# concurrency stress: snapshot isolation (satellite)
+# ---------------------------------------------------------------------------
+class TestConcurrencyStress:
+    N = 660                     # 3 chains of 200 + untouched tail
+    CHAINS = ((0, 200), (200, 400), (400, 600))
+
+    def test_snapshot_isolation_under_concurrent_load(self):
+        eng = ConnectivityEngine(n_vertices=self.N, recoverable=())
+        eng.start()
+        c = ConnectivityClient(eng)
+        stop = threading.Event()
+        errors: list = []
+        # the poisoned batch: injected fault *after* the ring write,
+        # before the commit — must roll back invisibly
+        poison = FaultInjector(fail_at=[(100, "post_write")])
+        eng._fault_injector = poison
+        eng._stream.fault_injector = poison
+
+        def ingest_chain(lo, hi):
+            try:
+                for src, dst in _chain_batches(lo, hi, step=20):
+                    ack = c.ingest(src, dst)
+                    # read-your-writes: acked edges are visible to the
+                    # very next query from this thread
+                    if not c.same_component(int(src[0]), int(dst[-1])):
+                        errors.append(
+                            f"acked batch {ack.batch_index} invisible")
+            except Exception as exc:  # noqa: BLE001
+                errors.append(f"ingest_chain({lo}): {exc!r}")
+
+        def query_chain_pairs(tid):
+            try:
+                monotone_pairs = [(lo, hi - 1) for lo, hi in self.CHAINS]
+                cross_pairs = [(50, 250), (250, 450), (50, 450),
+                               (610, 630), (601, 602)]
+                seen = {p: False for p in monotone_pairs}
+                while not stop.is_set():
+                    for p in monotone_pairs:
+                        ans = c.same_component(*p)
+                        if seen[p] and not ans:
+                            errors.append(f"monotonicity violated {p}")
+                        seen[p] = seen[p] or ans
+                    for p in cross_pairs:
+                        if c.same_component(*p):
+                            errors.append(
+                                f"impossible connection {p} (tid {tid})")
+            except Exception as exc:  # noqa: BLE001
+                errors.append(f"query({tid}): {exc!r}")
+
+        qthreads = [threading.Thread(target=query_chain_pairs, args=(t,),
+                                     daemon=True) for t in range(3)]
+        ithreads = [threading.Thread(target=ingest_chain, args=span,
+                                     daemon=True) for span in self.CHAINS]
+        for t in qthreads + ithreads:
+            t.start()
+        for t in ithreads:
+            t.join(timeout=120)
+        # poisoned batch: unique pair in the untouched tail; the fault
+        # fires post-write and the commit must roll back
+        poison.fail_at = ((eng.n_batches, "post_write"),)
+        with pytest.raises(SimulatedFault):
+            c.ingest([610], [630])
+        assert not c.same_component(610, 630)   # rollback never visible
+        stop.set()
+        for t in qthreads:
+            t.join(timeout=60)
+        eng.close()
+        assert not errors, errors[:10]
+        # final state == oracle over everything successfully ingested
+        final = eng.snapshot()
+        graph = eng._stream.graph()
+        oracle = solve(graph)
+        np.testing.assert_array_equal(np.asarray(final.labels),
+                                      np.asarray(oracle.labels))
+        assert final.same_component(0, 199)
+        assert not final.same_component(610, 630)
+
+    def test_no_torn_reads_during_rollback_storm(self):
+        # every 2nd ingest is poisoned post-write; readers hammering the
+        # poisoned pair must never see it connected.  The injector keys
+        # on the stream's *committed* batch index, which a rolled-back
+        # batch does not advance: poisoned submission k sits at step
+        # k//2, and the clean one that follows commits that step after
+        # the (fire-once) entry has already fired.
+        n_batches = 8
+        injector = FaultInjector(
+            fail_at=[(k, "post_write") for k in range(n_batches)])
+        eng = ConnectivityEngine(n_vertices=64, recoverable=(),
+                                 fault_injector=injector)
+        eng.start()
+        c = ConnectivityClient(eng)
+        stop = threading.Event()
+        violations: list = []
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    if c.same_component(40, 41):
+                        violations.append("rolled-back edge visible")
+                except Exception as exc:  # noqa: BLE001
+                    violations.append(repr(exc))
+
+        threads = [threading.Thread(target=reader, daemon=True)
+                   for _ in range(2)]
+        for t in threads:
+            t.start()
+        committed = 0
+        for k in range(2 * n_batches):
+            try:
+                # poisoned batches carry the sentinel pair (40, 41);
+                # clean ones the growing chain
+                if k % 2 == 0:
+                    c.ingest([40], [41])
+                else:
+                    c.ingest([committed], [committed + 1])
+                    committed += 1
+            except SimulatedFault:
+                pass
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        eng.close()
+        assert not violations, violations[:5]
+        assert eng.n_batches == committed
+        assert not eng.snapshot().same_component(40, 41)
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: zero acked-ingest loss (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+class TestRecovery:
+    def _run(self, tmp_path, rng, fail_at=(), checkpoint_every=2):
+        n, batches = 128, 10
+        src = rng.integers(0, n, (batches, 32)).astype(np.int32)
+        dst = rng.integers(0, n, (batches, 32)).astype(np.int32)
+        manager = CheckpointManager(str(tmp_path), async_save=False)
+        injector = FaultInjector(
+            fail_at=[(k, "pre") for k in fail_at]) if fail_at else None
+        eng = ConnectivityEngine(
+            n_vertices=n, manager=manager,
+            checkpoint_every=checkpoint_every,
+            recoverable=(SimulatedFault,), fault_injector=injector,
+            backoff_base=0.001, sleep_fn=lambda dt: None)
+        eng.start()
+        c = ConnectivityClient(eng)
+        acks = [c.ingest(src[k], dst[k]) for k in range(batches)]
+        labels = np.asarray(eng.snapshot().labels)
+        counters = (int(eng.snapshot().iterations),
+                    float(np.asarray(eng.snapshot().edges_visited)))
+        eng.close()
+        return eng, acks, labels, counters
+
+    def test_crash_restart_zero_acked_loss(self, tmp_path, rng):
+        clean_rng = np.random.default_rng(7)
+        fault_rng = np.random.default_rng(7)
+        _, _, clean_labels, clean_counters = self._run(
+            tmp_path / "clean", clean_rng)
+        eng, acks, labels, counters = self._run(
+            tmp_path / "faulty", fault_rng, fail_at=(3, 7))
+        # every submitted ingest was acked (recovery, not refusal) ...
+        assert [a.batch_index for a in acks] == list(range(10))
+        # ... and the final state is bit-identical to the clean run,
+        # including the work counters (deterministic replay)
+        np.testing.assert_array_equal(labels, clean_labels)
+        assert counters == clean_counters
+        assert eng.restarts == 2
+        assert eng.metrics.count("replayed_batches") >= 1
+        assert eng.metrics.count("checkpoints") >= 5
+
+    def test_straggler_forces_checkpoint(self, tmp_path):
+        from repro.runtime.straggler import StragglerMonitor
+
+        class Scripted(StragglerMonitor):
+            def __init__(self, actions):
+                super().__init__()
+                self.actions = list(actions)
+
+            def start_step(self):
+                pass
+
+            def end_step(self):
+                return self.actions.pop(0) if self.actions else "ok"
+
+        manager = CheckpointManager(str(tmp_path), async_save=False)
+        eng = ConnectivityEngine(
+            n_vertices=32, manager=manager, checkpoint_every=1000,
+            straggler=Scripted(["ok", "checkpoint", "ok"]))
+        eng.start()
+        c = ConnectivityClient(eng)
+        for k in range(3):
+            c.ingest([k], [k + 1])
+        eng.close()
+        # cadence alone (every 1000) would never checkpoint — the
+        # straggler escalation forced one at batch 2
+        assert eng.metrics.count("checkpoints") == 1
+        assert eng.metrics.count("straggler_events") == 1
+        assert manager.latest_step() == 2
+
+    def test_recovery_without_manager_is_plain_retry(self, rng):
+        injector = FaultInjector(fail_at=[(1, "pre")])
+        eng = ConnectivityEngine(n_vertices=32, fault_injector=injector,
+                                 recoverable=(SimulatedFault,),
+                                 sleep_fn=lambda dt: None)
+        eng.start()
+        c = ConnectivityClient(eng)
+        c.ingest([0], [1])
+        ack = c.ingest([1], [2])     # fault fires, atomic retry succeeds
+        assert ack.batch_index == 1
+        assert c.same_component(0, 2)
+        assert eng.restarts == 1
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# streaming-level out-of-range rejection (satellite bugfix)
+# ---------------------------------------------------------------------------
+class TestStreamingQueryValidation:
+    def test_streaming_rejects_out_of_range(self):
+        eng = StreamingConnectivity(n_vertices=5)
+        eng.ingest([0, 1], [1, 2])
+        with pytest.raises(IndexError, match="out of range"):
+            eng.component_of(7)
+        with pytest.raises(IndexError, match="out of range"):
+            eng.same_component(7, 0)
+        with pytest.raises(IndexError):
+            eng.same_component(0, np.array([1, 9]))
+        # ids in [n, capacity) are invisible padding, not real vertices
+        assert eng.vertex_capacity > eng.n_vertices
+        with pytest.raises(IndexError, match="out of range"):
+            eng.component_of(eng.n_vertices)
+        assert eng.same_component(0, 2)
+
+    def test_component_result_rejects_out_of_range(self):
+        res = solve(Graph(src=np.array([0]), dst=np.array([1]),
+                          n_vertices=4))
+        with pytest.raises(IndexError, match="out of range"):
+            res.component_of(4)
+        with pytest.raises(IndexError, match="out of range"):
+            res.same_component(np.array([0, 5]), np.array([1, 1]))
+        with pytest.raises(IndexError, match=">= 0"):
+            res.component_of(-1)
+        assert res.component_of(3) == 3
+
+
+# ---------------------------------------------------------------------------
+# simulation harness (the bench's engine, miniature)
+# ---------------------------------------------------------------------------
+class TestSimulate:
+    def test_simulation_report_shape(self):
+        spec = WorkloadSpec(n_vertices=512, n_queries=2_000,
+                            edges_per_batch=64, write_ratio=0.002,
+                            n_query_threads=2, window=256, seed=3)
+        report, labels = run_simulation(spec)
+        assert report["failures"] == 0
+        assert report["counters"]["queries_answered"] == 2_000
+        assert report["final"]["n_batches"] == spec.n_ingest_batches
+        assert report["acked_batches"] == spec.n_ingest_batches
+        assert labels.shape == (512,)
+        assert report["latency_ms"]["p99"] >= report["latency_ms"]["p50"]
+        assert report["throughput_qps"] > 0
+        assert report["batch_size_hist"]
+        # same spec, fresh engine -> bit-identical committed state
+        report2, labels2 = run_simulation(spec)
+        np.testing.assert_array_equal(labels, labels2)
+        assert report2["final"]["labels_crc32"] == \
+            report["final"]["labels_crc32"]
+
+    def test_simulated_crashes_preserve_acks_and_labels(self, tmp_path):
+        spec = WorkloadSpec(n_vertices=256, n_queries=800,
+                            edges_per_batch=32, write_ratio=0.01,
+                            n_query_threads=2, window=128, seed=5)
+        clean, clean_labels = run_simulation(spec)
+        injector = FaultInjector(fail_at=[(2, "pre"), (5, "pre")])
+        manager = CheckpointManager(str(tmp_path), async_save=False)
+        faulty, faulty_labels = run_simulation(
+            spec, manager=manager, fault_injector=injector,
+            checkpoint_every=2, recoverable=(SimulatedFault,),
+            sleep_fn=lambda dt: None)
+        np.testing.assert_array_equal(faulty_labels, clean_labels)
+        assert faulty["acked_batches"] == clean["acked_batches"] == \
+            spec.n_ingest_batches
+        assert faulty["counters"]["restarts"] == 2
+        assert faulty["failures"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the LM server on the shared primitives (satellite refactor)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestBatchedServerOnPrimitives:
+    def test_serve_to_completion(self):
+        from repro.configs import get_arch
+        from repro.launch.serve import BatchedServer, Request
+
+        config = get_arch("xlstm-125m").smoke_config()
+        server = BatchedServer(config, n_slots=2, max_len=24)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, config.vocab_size,
+                                            6).astype(np.int32),
+                        max_new_tokens=3)
+                for i in range(3)]
+        out = server.serve(reqs)
+        assert sorted(out) == [0, 1, 2]
+        assert all(len(v) == 3 for v in out.values())
+        assert all(r.done for r in reqs)
