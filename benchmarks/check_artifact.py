@@ -25,7 +25,18 @@ Fails (exit 1) when:
 * the recovery gate regressed (schema 4) — a stream surviving two
   injected crashes (restore + replay through the crash-restart driver)
   must land bit-identical to the fault-free stream with cumulative
-  ``edges_visited`` under 2x the clean run (DESIGN.md §12).
+  ``edges_visited`` under 2x the clean run (DESIGN.md §12);
+* the wall-clock gates regressed (schema 5, DESIGN.md §14) — both
+  re-derived here from the raw per-side seconds in the artifact, never
+  trusted from the summary booleans:
+
+  - ``frontier_wallclock_gate``: some frontier schedule (masked or
+    physically staged) must beat the dense sweep's wall time
+    (ratio < 1.0) on at least one (graph, schedule) pair;
+  - ``autotune_gate``: the autotuned plan must be >= the heuristic
+    prior at geomean over the suite (a row where the tuner kept the
+    prior counts as exactly 1.0 — equal configs trace to the identical
+    program).
 
 For serving artifacts, fails when:
 
@@ -44,6 +55,7 @@ environment, e.g. as a bare CI step.
 from __future__ import annotations
 
 import json
+import math
 import sys
 
 
@@ -90,6 +102,59 @@ def check(payload: dict) -> list:
     if "recovery_bit_identical" not in summary and \
             int(payload.get("schema", 0)) >= 4:
         errors.append("schema >= 4 artifact is missing the recovery gate")
+    if int(payload.get("schema", 0)) >= 5:
+        errors.extend(check_wallclock_gates(payload))
+    return errors
+
+
+def check_wallclock_gates(payload: dict) -> list:
+    """Re-derive the schema-5 wall-clock verdicts from raw timings.
+
+    The summary booleans are recomputed here from the per-graph seconds
+    so a hand-edited summary cannot pass a failing artifact.
+    """
+    errors = []
+    fw = payload.get("frontier_wallclock_gate", {})
+    if not fw:
+        errors.append(
+            "schema >= 5 artifact is missing the frontier wall-clock gate")
+    else:
+        ratios = []
+        for row in fw.values():
+            dense = row.get("dense_s") or 0.0
+            if dense <= 0:
+                continue
+            for side in ("masked_s", "staged_s"):
+                if row.get(side):
+                    ratios.append(row[side] / dense)
+        if not ratios:
+            errors.append("frontier wall-clock gate has no usable timings")
+        elif min(ratios) >= 1.0:
+            errors.append(
+                f"frontier wall-clock gate regressed: no schedule beats "
+                f"dense on any graph (best ratio {min(ratios):.3f} >= 1.0)")
+    at = payload.get("autotune_gate", {})
+    if not at:
+        errors.append("schema >= 5 artifact is missing the autotune gate")
+    else:
+        logs = []
+        for name, row in at.items():
+            if not row.get("plan_differs"):
+                logs.append(0.0)         # prior kept: identical program
+                continue
+            h, t = row.get("heuristic_s"), row.get("tuned_s")
+            if not h or not t:
+                errors.append(
+                    f"autotune gate row {name!r} differs from the prior "
+                    f"but has no raw timings to re-derive the ratio from")
+                continue
+            logs.append(math.log(h / t))
+        if logs:
+            geomean = math.exp(sum(logs) / len(logs))
+            if geomean < 1.0 - 1e-9:
+                errors.append(
+                    f"autotune gate regressed: tuned-vs-heuristic geomean "
+                    f"{geomean:.4f} < 1.0")
     return errors
 
 
@@ -184,6 +249,10 @@ def check_path(path: str) -> int:
               f"graphs, all_correct={summary.get('all_correct')}, "
               f"frontier_visits_fewer_edges="
               f"{summary.get('frontier_visits_fewer_edges')}, "
+              f"frontier_best_wallclock_ratio="
+              f"{summary.get('frontier_best_wallclock_ratio')}, "
+              f"autotune_vs_heuristic_geomean="
+              f"{summary.get('autotune_vs_heuristic_geomean')}, "
               f"streaming_bit_identical="
               f"{summary.get('streaming_bit_identical')}, "
               f"recovery_bit_identical="

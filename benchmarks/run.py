@@ -60,10 +60,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="subsampled suite for quick runs")
-    ap.add_argument("--only", help="comma-separated section prefixes")
+    ap.add_argument("--only", help="comma-separated section prefixes "
+                                   "('bench' = artifact-only regen)")
     ap.add_argument("--json", default="BENCH_connectivity.json",
                     help="connectivity artifact path ('' disables)")
+    ap.add_argument("--backend", default="auto",
+                    help="kernel backend for the suite (validated up "
+                         "front: a backend that cannot compile on this "
+                         "host fails fast with a clear error)")
+    ap.add_argument("--retune", action="store_true",
+                    help="clear the plan tuning cache and re-run the "
+                         "measuring autotuner from scratch")
     args = ap.parse_args()
+
+    # Fail fast on an impossible backend request *before* any section
+    # runs — a raw Pallas lowering error mid-suite helps nobody.
+    connectivity.validate_backend(args.backend)
+    if args.backend != "auto":
+        connectivity.set_backend(args.backend)
 
     failures = []
     for name, fn in SECTIONS:
@@ -79,19 +93,26 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc()
     # Emit the artifact when the connectivity suite is in play (no --only,
-    # or a fig section selected — then run_suite() is already cached);
+    # a fig section selected — then run_suite() is already cached — or
+    # the explicit 'bench' pseudo-section for artifact-only regen);
     # `--only roof --json x` should not trigger a full suite run.
     want_json = args.json and (
         not args.only
-        or any(p.startswith("fig") for p in args.only.split(",")))
+        or any(p.startswith(("fig", "bench"))
+               for p in args.only.split(",")))
     if want_json:
         try:
             records = connectivity.run_suite(fast=args.fast)
             gate = connectivity.blocked_vs_xla_gate(fast=args.fast)
             stream_gate = streaming.run_gate(fast=args.fast)
-            payload = connectivity.records_to_json(records, fast=args.fast,
-                                                   gate=gate,
-                                                   streaming=stream_gate)
+            fw_gate = connectivity.frontier_wallclock_gate(fast=args.fast)
+            tune_gate = connectivity.autotune_gate(fast=args.fast,
+                                                   retune=args.retune)
+            from repro.connectivity import planner as _planner
+            payload = connectivity.records_to_json(
+                records, fast=args.fast, gate=gate, streaming=stream_gate,
+                frontier_wallclock=fw_gate, autotune=tune_gate,
+                tuning_cache=_planner.cache.entries())
             recovery.merge_into_artifact(payload,
                                          recovery.run_gate(fast=args.fast))
             with open(args.json, "w") as f:

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from repro.connectivity import minmap
 from repro.connectivity.options import SolveOptions
 from repro.connectivity.result import ComponentResult
-from repro.connectivity.solve import _resolve, make_result, \
-    resolve_warm_start, solver_output
+from repro.connectivity.solve import _PLANNED_SOLVERS, _resolve, \
+    make_result, resolve_warm_start, solver_output
 from repro.graphs.structs import Graph
 
 
@@ -178,6 +178,17 @@ def solve_batch(
         raise ValueError(f"solver {spec.name!r} does not support warm "
                          "starts")
 
+    provenance = None
+    if spec.name in _PLANNED_SOLVERS:
+        # one plan for the whole fleet (resolution is per padded shape);
+        # pinning it keeps the vmapped solver, and the provenance record,
+        # on the same plan.  Under vmap the solver always takes the masked
+        # compaction schedule — a staged plan still runs, just masked.
+        from repro.connectivity.solvers import resolve_backend_plan
+        _, plan = resolve_backend_plan(n, int(batched.src.shape[-1]), opts)
+        opts = opts.replace(plan=plan)
+        provenance = (plan.provenance_entry(),)
+
     if spec.supports_batch:
         def one(s, d, L0):
             return solver_output(
@@ -211,4 +222,4 @@ def solve_batch(
             f"solver {spec.name!r} does not support batched solving")
 
     return make_result(labels, iterations, converged, edges_visited,
-                       batch_sizes=sizes)
+                       batch_sizes=sizes, provenance=provenance)

@@ -62,31 +62,36 @@ class ContourState(NamedTuple):
     done: jax.Array        # bool
 
 
-def _make_relax(backend, plan):
+def _make_relax(backend, plan, vmem_limit_bytes=None):
     """relax(L, src, dst, order, limit) on the chosen backend/tile plan."""
     if plan is None:
         def relax(L, src, dst, order, limit):
             return mm_ops.mm_relax_backend(L, src, dst, order=order,
                                            backend=backend,
-                                           edge_limit=limit)
+                                           edge_limit=limit,
+                                           vmem_limit_bytes=vmem_limit_bytes)
     else:
+        # legacy KernelPlan carries no fusion field; ExecutionPlan does
+        fuse = getattr(plan, "fuse_relabel", False)
+
         def relax(L, src, dst, order, limit):
             return mm_ops.mm_relax_backend(
                 L, src, dst, order=order, backend=backend,
                 block_edges=plan.block_edges, label_block=plan.label_block,
                 chunk_updates=plan.chunk_updates, interpret=plan.interpret,
-                edge_limit=limit)
+                edge_limit=limit, fuse=fuse,
+                vmem_limit_bytes=vmem_limit_bytes)
     return relax
 
 
 def _make_step(variant: str, warmup: int, async_compress: int,
-               backend: str = "xla", plan=None):
+               backend: str = "xla", plan=None, vmem_limit_bytes=None):
     """Return step(L, it, src, dst, limit) -> L_new for the chosen variant.
 
     ``limit`` is the work-adaptive frontier bound (None for the dense
     schedule: every edge, every sweep).
     """
-    relax = _make_relax(backend, plan)
+    relax = _make_relax(backend, plan, vmem_limit_bytes)
 
     def sweep_sync(L, src, dst, order, limit):
         """Alg. 1 body: one synchronous MM^order sweep."""
@@ -158,7 +163,7 @@ def _make_step(variant: str, warmup: int, async_compress: int,
     jax.jit,
     static_argnames=("n_vertices", "variant", "max_iters", "warmup",
                      "async_compress", "backend", "plan", "sampling",
-                     "compact_every"),
+                     "compact_every", "vmem_limit_bytes"),
 )
 def contour_labels(
     src: jax.Array,
@@ -174,6 +179,7 @@ def contour_labels(
     plan=None,
     sampling: int = 0,
     compact_every: int = 0,
+    vmem_limit_bytes: Optional[int] = None,
 ):
     """Run Contour; returns (labels[n], n_iterations, converged, visited).
 
@@ -200,7 +206,8 @@ def contour_labels(
             "C-Syn is the Alg.-1-verbatim reference and does not take the "
             "work-adaptive schedule; use C-2/C-m (or any async variant) "
             "with sampling/compact_every")
-    step = _make_step(variant, warmup, async_compress, backend, plan)
+    step = _make_step(variant, warmup, async_compress, backend, plan,
+                      vmem_limit_bytes)
     L0 = lab.resolve_init_labels(init_labels, n_vertices, src.dtype)
 
     if adaptive:

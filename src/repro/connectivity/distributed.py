@@ -74,7 +74,7 @@ def _round_up(x: int, k: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "edge_axes", "local_rounds", "max_iters",
-                     "async_compress", "backend", "sampling",
+                     "async_compress", "backend", "plan", "sampling",
                      "compact_every"),
 )
 def _distributed_fixpoint(
@@ -89,6 +89,7 @@ def _distributed_fixpoint(
     max_iters: int,
     async_compress: int,
     backend: str,
+    plan=None,
     sampling: int,
     compact_every: int,
 ):
@@ -115,12 +116,22 @@ def _distributed_fixpoint(
     edge_spec = P(axis if len(axis) > 1 else axis[0])
     lbl_spec = P()  # replicated
 
+    # per-shard tile parameters come from the resolved execution plan when
+    # the facade threads one down (None = the heuristic tables, as before)
+    tile_kw = {}
+    if plan is not None:
+        tile_kw = dict(block_edges=plan.block_edges,
+                       label_block=plan.label_block,
+                       chunk_updates=plan.chunk_updates,
+                       interpret=plan.interpret,
+                       fuse=getattr(plan, "fuse_relabel", False))
+
     def body(src_in, dst_in, L0, n_act):
         def relax_rounds(L, src_loc, dst_loc, limit):
             for _ in range(local_rounds):
                 L = mm_ops.mm_relax_backend(L, src_loc, dst_loc, order=2,
                                             backend=backend,
-                                            edge_limit=limit)
+                                            edge_limit=limit, **tile_kw)
                 L = lab.pointer_jump(L, rounds=async_compress)
             # the one collective of the round: elementwise min across shards
             return jax.lax.pmin(L, axis)
@@ -206,6 +217,7 @@ def distributed_contour(
     max_iters: int = 10_000,
     async_compress: int = 1,
     backend: str = "xla",
+    plan=None,
     init_labels: Optional[jax.Array] = None,
     sampling: int = 0,
     compact_every: int = 0,
@@ -251,7 +263,7 @@ def distributed_contour(
         src, dst, L0, jnp.int32(n_active),
         mesh=mesh, edge_axes=axis, local_rounds=local_rounds,
         max_iters=max_iters, async_compress=async_compress, backend=backend,
-        sampling=sampling, compact_every=compact_every)
+        plan=plan, sampling=sampling, compact_every=compact_every)
 
 
 @functools.partial(

@@ -9,8 +9,11 @@ fields mirror the three decision layers of the system:
   ``variant`` (Contour's ``C-Syn``/``C-1``/``C-2``/``C-m``/``C-11mm``/
   ``C-1m1m`` or a literal ``C-<h>``);
 * **kernel dispatch** — ``backend`` (``"auto"`` resolves through
-  ``plan_contour_kernel``) or an explicit resolved
-  :class:`~repro.kernels.contour_mm.ops.KernelPlan` in ``plan``;
+  ``repro.connectivity.planner.resolve_plan``: tuning cache first, then
+  the heuristic tables) or an explicit pinned
+  :class:`~repro.connectivity.planner.ExecutionPlan` (a legacy
+  :class:`~repro.kernels.contour_mm.ops.KernelPlan` is also accepted)
+  in ``plan``;
 * **work schedule** — ``sampling``/``compact_every`` enable the
   work-adaptive frontier contraction of ``repro.connectivity.frontier``
   (sample-prefix sweeps, largest-component filter, periodic active-edge
@@ -44,7 +47,9 @@ class SolveOptions:
     algorithm: str = "contour"
     variant: Optional[str] = None          # per-algorithm default if None
     backend: str = "auto"
-    plan: Optional[KernelPlan] = None      # explicit tile plan (else auto)
+    # explicit pinned ExecutionPlan (or legacy KernelPlan); None = resolve
+    # via the planner (tuning cache for "auto", heuristic tables otherwise)
+    plan: Optional[Any] = None
     mesh: Optional[jax.sharding.Mesh] = None
     edge_axes: Tuple[str, ...] = ("data",)
     local_rounds: int = 1
@@ -59,6 +64,10 @@ class SolveOptions:
     # backend and record the fallback in ComponentResult.provenance
     # instead of failing the request.  False = fail loudly.
     kernel_fallback: bool = True
+    # per-core VMEM budget override (bytes) behind the scalar kernel's
+    # whole-L ceiling; None = $REPRO_VMEM_BYTES, device query, or the
+    # per-platform table (planner.vmem)
+    vmem_limit_bytes: Optional[int] = None
 
     def replace(self, **updates) -> "SolveOptions":
         """Return a copy with the given fields replaced."""
@@ -85,3 +94,6 @@ class SolveOptions:
         if self.mesh is not None and not self.edge_axes:
             raise ValueError("edge_axes must be non-empty when a mesh is "
                              "given")
+        if self.vmem_limit_bytes is not None and self.vmem_limit_bytes <= 0:
+            raise ValueError(f"vmem_limit_bytes must be > 0, got "
+                             f"{self.vmem_limit_bytes}")

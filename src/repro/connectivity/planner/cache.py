@@ -1,0 +1,165 @@
+"""On-disk tuning cache: measured plans per (platform, n-bucket, m-bucket).
+
+A single JSON file maps :func:`~repro.connectivity.planner.plan.plan_key`
+buckets to the config the measuring autotuner found fastest, plus the
+timing evidence.  Design constraints, in order:
+
+* **solve() stays deterministic and fast** — lookups are an in-process
+  dict hit (the file is re-read only when its mtime changes); tuning
+  itself happens only when explicitly requested (``benchmarks/run.py
+  --retune``, :func:`planner.autotune.autotune`), never implicitly on a
+  user's solve.
+* **corrupt or stale entries can never crash a solve** — any parse
+  error, schema mismatch, unknown field, wrong type, or invalid backend
+  makes :func:`lookup` return ``None`` and the caller falls back to the
+  heuristic prior (property-tested in ``tests/test_planner.py``).
+* **fallback demotions expire** — when a kernel launch fails, the
+  resilience path records an ``origin="fallback"`` XLA entry with a TTL
+  instead of pinning XLA forever; once it lapses the bucket resolves back
+  to the heuristic (or a fresh tuning) and the original backend gets
+  retried/retuned.
+
+Location: ``$REPRO_TUNING_CACHE`` if set, else
+``~/.cache/repro/contour_tuning.json``.  Delete the file (or point the
+env var at an empty path) to clear every tuned plan.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.connectivity.planner.plan import ExecutionPlan, plan_key
+
+ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
+CACHE_SCHEMA = 1
+
+# In-process mirror: path -> (mtime_ns or None, entries dict)
+_LOADED: Dict[str, Tuple[Optional[int], dict]] = {}
+
+
+def cache_path() -> str:
+    env = os.environ.get(ENV_CACHE_PATH)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "contour_tuning.json")
+
+
+def _read(path: str) -> dict:
+    """Entries dict from disk; {} on any corruption (never raises)."""
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        _LOADED[path] = (None, {})
+        return {}
+    cached = _LOADED.get(path)
+    if cached is not None and cached[0] == mtime:
+        return cached[1]
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if not isinstance(payload, dict) or \
+                payload.get("schema") != CACHE_SCHEMA:
+            entries: dict = {}
+        else:
+            entries = payload.get("entries", {})
+            if not isinstance(entries, dict):
+                entries = {}
+    except (OSError, ValueError):
+        entries = {}
+    _LOADED[path] = (mtime, entries)
+    return entries
+
+
+def _write(path: str, entries: dict) -> None:
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".contour_tuning.")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"schema": CACHE_SCHEMA, "entries": entries}, f,
+                      indent=2, sort_keys=True)
+        os.replace(tmp, path)  # atomic publish, same protocol as §12
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _LOADED.pop(path, None)
+
+
+def entries(path: Optional[str] = None) -> dict:
+    """A copy of the raw cache entries (for the bench artifact)."""
+    return dict(_read(path or cache_path()))
+
+
+def lookup(
+    n_vertices: int,
+    m_edges: int,
+    platform: str,
+    path: Optional[str] = None,
+    now: Optional[float] = None,
+) -> Optional[ExecutionPlan]:
+    """The cached plan for this bucket, or None (miss/corrupt/expired)."""
+    path = path or cache_path()
+    entry = _read(path).get(plan_key(platform, n_vertices, m_edges))
+    if not isinstance(entry, dict):
+        return None
+    origin = entry.get("origin", "tuned")
+    if origin not in ("tuned", "fallback"):
+        return None
+    if origin == "fallback":
+        expires = entry.get("expires_at")
+        if not isinstance(expires, (int, float)):
+            return None  # malformed demotion: treat as expired
+        if (time.time() if now is None else now) >= expires:
+            return None  # lapsed: retune instead of pinning XLA forever
+    try:
+        return ExecutionPlan.from_config(entry.get("config"), origin=origin)
+    except (ValueError, TypeError):
+        return None  # stale/corrupt entry: heuristic prior takes over
+
+
+def store(
+    n_vertices: int,
+    m_edges: int,
+    platform: str,
+    plan: ExecutionPlan,
+    *,
+    time_s: Optional[float] = None,
+    timings: Optional[dict] = None,
+    origin: str = "tuned",
+    ttl_s: Optional[float] = None,
+    path: Optional[str] = None,
+    now: Optional[float] = None,
+) -> dict:
+    """Persist a measured (or demoted) plan for this bucket; returns the
+    stored entry."""
+    path = path or cache_path()
+    now = time.time() if now is None else now
+    entry = {
+        "config": plan.to_config(),
+        "origin": origin,
+        "measured_at": now,
+    }
+    if time_s is not None:
+        entry["time_s"] = float(time_s)
+    if timings is not None:
+        entry["timings"] = timings
+    if ttl_s is not None:
+        entry["expires_at"] = now + float(ttl_s)
+    ents = dict(_read(path))
+    ents[plan_key(platform, n_vertices, m_edges)] = entry
+    _write(path, ents)
+    return entry
+
+
+def clear(path: Optional[str] = None) -> None:
+    """Drop every cached plan (used by ``--retune`` and tests)."""
+    path = path or cache_path()
+    try:
+        os.unlink(path)
+    except OSError:
+        pass
+    _LOADED.pop(path, None)

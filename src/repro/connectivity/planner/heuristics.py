@@ -1,0 +1,88 @@
+"""Cold-start heuristic tables: the autotuner's prior.
+
+These are the (slightly extended) tables that used to live in
+``kernels.contour_mm.ops.plan_contour_kernel``.  They remain the
+deterministic fallback whenever the tuning cache has no (valid) entry for
+a bucket, and the reference side of the bench ``autotune_gate`` — the
+tuned plan must measure no slower than this prior.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.connectivity.planner.plan import ExecutionPlan
+
+# Past this many edges the staged frontier schedule is worth its extra
+# per-stage compiles on the XLA path: each stage re-enters the while loop
+# over a physically sliced (pow2-bucketed) edge array, so sweeps and
+# contractions stop paying full-m masked work.  Below it the masked
+# single-loop schedule wins (one compile, tiny arrays).
+STAGED_MIN_EDGES = 1 << 15
+
+# Single-tile regime: the blocked kernel holds all of L in one tile and
+# the fused relabel+scatter-min pass is eligible (no update-stream
+# materialisation, no radix binning).
+SINGLE_TILE_MAX_N = 4096
+
+
+def _round_up(x: int, k: int) -> int:
+    return (x + k - 1) // k * k
+
+
+def heuristic_plan(
+    n_vertices: int,
+    n_edges: int,
+    platform: Optional[str] = None,
+) -> ExecutionPlan:
+    """Pick backend + tile sizes + schedule for a graph size, by table.
+
+    Off-TPU the only compilable backend is XLA scatter-min.  On TPU the
+    blocked kernel is always eligible (no ceiling); tile sizes balance the
+    one-hot combine work (∝ ``label_block`` per update) against per-bin
+    padding waste (∝ ``n_blocks·chunk_updates``):
+
+    * small graphs waste least with one or two tiles spanning all of L —
+      and in the single-tile regime the fused relabel+scatter-min pass
+      skips the update-stream materialisation entirely;
+    * large graphs hold ``label_block`` at 2048 (8 KiB tile, 1 MiB one-hot
+      buffer at chunk 128) and scale ``chunk_updates`` with edge density
+      so sparse bins do not drown in padding.
+
+    ``compact_schedule`` only matters when the caller also enables the
+    work-adaptive frontier (``sampling``/``compact_every``): big edge
+    lists get the ``"staged"`` physically-sliced realisation, small ones
+    keep the masked in-loop schedule.
+    """
+    platform = platform or jax.default_backend()
+    compact = "staged" if n_edges >= STAGED_MIN_EDGES else "masked"
+    if platform != "tpu":
+        # Pallas TPU kernels cannot compile here; if a caller forces a
+        # pallas backend anyway it runs in interpret (validation) mode.
+        return ExecutionPlan(backend="xla", interpret=True,
+                             compact_schedule=compact, origin="heuristic")
+    if n_vertices <= SINGLE_TILE_MAX_N:
+        # single tile: the blocked kernel degenerates to a whole-L
+        # vectorized sweep with zero binning waste, and the fused
+        # gather+scatter-min pass applies
+        label_block = max(256, _round_up(n_vertices, 128))
+        chunk = 128
+        fuse = True
+    else:
+        label_block = 2048
+        # denser update streams amortise more padding; cap the one-hot
+        # buffer at chunk*label_block = 512Ki elements (2 MiB)
+        chunk = 64 if n_edges < 8 * n_vertices else 256
+        fuse = False
+    block_edges = 512 if n_edges < 1 << 20 else 2048
+    return ExecutionPlan(
+        backend="pallas_blocked",
+        block_edges=block_edges,
+        label_block=label_block,
+        chunk_updates=chunk,
+        interpret=False,
+        compact_schedule=compact,
+        fuse_relabel=fuse,
+        origin="heuristic",
+    )

@@ -1,0 +1,274 @@
+"""Staged realisation of the work-adaptive frontier: the grid really shrinks.
+
+The masked schedule (``frontier.adaptive_fixpoint``) keeps every array at
+its original static shape inside one ``lax.while_loop`` — sound, zero host
+syncs, composable with ``vmap``/``shard_map`` — but on the XLA path a
+"skipped" edge still flows through full-shape masked tiles, which is
+exactly why the counted-work savings of DESIGN.md §10 never showed up as
+wall clock (ROADMAP open item 1).
+
+This module is the physical counterpart, per Sutton et al.'s
+*Adaptive Work-Efficient Connected Components on the GPU* (PAPERS.md):
+the fixpoint is split into **stages**.  Each stage is the same on-device
+while loop, but over edge arrays *physically sliced* to a power-of-two
+bucket of the live frontier; when the frontier drops below half the
+stage's capacity the loop exits early, the host slices the ``[active |
+retired]`` prefix (one device-side slice, no gather), and re-enters at
+the smaller static shape.  XLA shapes are static *per program*, so "the
+grid shrinks inside the while loop" is realised as a chain of while loops
+at geometrically shrinking shapes — at most ``log2(m)`` stages, each
+compiled once per pow2 bucket and cached across graphs.
+
+Soundness of dropping the suffix: the layout invariant of
+``frontier.contract_edges`` puts every live edge in the ``active_m``
+prefix; positions past it are never swept (``frontier_limit``), never
+checked (``masked_converged_early``), and never re-activated (contraction
+only retires).  The sliced-off suffix is therefore provably dead weight —
+the fixed point is unchanged, and it equals the oracle min-vertex-id
+labelling exactly as the masked schedule's does (property-tested
+masked == staged == dense == oracle in ``tests/test_planner.py``).
+
+The sampling phase gets the same treatment: the first ``sampling`` sweeps
+touch only the deterministic ``m // 4`` edge prefix, so they run over a
+*static slice* of the edge arrays — bit-equivalent to the masked limit
+(the masked-out suffix contributes only ``(0, 0)`` self-loop no-ops) at a
+quarter of the sweep cost.
+
+This driver is host-side by construction (it reads ``active_m`` between
+stages), so it only runs from an eager ``solve()``; under an enclosing
+trace (``vmap``/``solve_batch``/user ``jit``) the caller keeps the masked
+schedule.  The streaming engine also stays masked: its per-batch delta
+solves are latency-bound single programs and their bit-identical
+conformance gate is frozen.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectivity import frontier as fr
+from repro.connectivity import minmap as lab
+from repro.connectivity.planner.plan import next_pow2
+
+# Below this capacity a stage runs to convergence instead of re-slicing:
+# the residual arrays are small enough that another compile costs more
+# than the masked work it would save.
+MIN_STAGE_EDGES = 1024
+
+
+class _StageState(NamedTuple):
+    L: jax.Array
+    it: jax.Array
+    done: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    active_m: jax.Array
+    visited: jax.Array
+
+
+def _build_step(variant, warmup, async_compress, backend, plan,
+                vmem_limit_bytes=None):
+    from repro.connectivity.contour import _make_step  # lazy: import cycle
+    return _make_step(variant, warmup, async_compress, backend, plan,
+                      vmem_limit_bytes)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("variant", "warmup", "async_compress", "backend",
+                     "plan", "sampling", "max_iters", "n_vertices",
+                     "vmem_limit_bytes"),
+)
+def _sampling_stage(
+    src_s: jax.Array,
+    dst_s: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    L0: jax.Array,
+    *,
+    variant: str,
+    warmup: int,
+    async_compress: int,
+    backend: str,
+    plan,
+    sampling: int,
+    max_iters: int,
+    n_vertices: int,
+    vmem_limit_bytes=None,
+):
+    """The ``sampling`` prefix sweeps over the *sliced* sample arrays,
+    then the largest-component filter over the full edge list.
+
+    Equivalent to the masked path's first ``sampling`` iterations: there
+    the limit masks everything past ``sample_m`` to ``(0, 0)`` self-loops
+    (scatter-min no-ops, since ``L[0] == 0`` under the ``L[v] <= v``
+    invariant), and convergence is never declared from a sample sweep
+    (``gate_sampling_done``), so no checks are needed here either.
+    """
+    step = _build_step(variant, warmup, async_compress, backend, plan,
+                       vmem_limit_bytes)
+    sample_m = jnp.int32(src_s.shape[0])
+    iters = min(sampling, max_iters)
+
+    def body(i, L):
+        return step(L, jnp.int32(i), src_s, dst_s, sample_m)
+
+    L = jax.lax.fori_loop(0, iters, body, L0)
+    visited = jnp.float32(iters) * sample_m.astype(jnp.float32)
+    # the one largest-component filter pass, over the full edge list
+    src2, dst2, active2 = fr.apply_compaction(
+        L, src, dst, jnp.int32(src.shape[0]), jnp.int32(sampling),
+        sampling=sampling, compact_every=0, n_vertices=n_vertices)
+    return L, src2, dst2, active2, visited
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("variant", "warmup", "async_compress", "backend",
+                     "plan", "sampling", "compact_every", "max_iters",
+                     "n_vertices", "allow_exit", "vmem_limit_bytes"),
+)
+def _stage_fixpoint(
+    src: jax.Array,
+    dst: jax.Array,
+    L0: jax.Array,
+    it0: jax.Array,
+    visited0: jax.Array,
+    active0: jax.Array,
+    *,
+    variant: str,
+    warmup: int,
+    async_compress: int,
+    backend: str,
+    plan,
+    sampling: int,
+    compact_every: int,
+    max_iters: int,
+    n_vertices: int,
+    allow_exit: bool,
+    vmem_limit_bytes=None,
+):
+    """One stage: the adaptive while loop at this (pow2) edge capacity.
+
+    Identical body to ``frontier.adaptive_fixpoint`` (same limit, same
+    convergence gate, same compaction schedule — shared helpers, so the
+    two schedules cannot drift), plus an early *stage exit* once the live
+    frontier fits in half this capacity — the driver then re-enters at
+    the smaller static shape.  Exit is gated on ``it >= sampling``: the
+    sampling phase's limit depends on the original ``m``, so it must
+    complete inside the first stage.
+    """
+    m = src.shape[0]
+    sample_m = jnp.int32(fr.sample_prefix_m(m))
+    half = m // 2
+    stop = half if (allow_exit and half >= MIN_STAGE_EDGES) else 0
+    step = _build_step(variant, warmup, async_compress, backend, plan,
+                       vmem_limit_bytes)
+
+    def shrunk(s: _StageState):
+        if stop <= 0:
+            return jnp.array(False)
+        return (s.active_m <= stop) & (s.it >= sampling)
+
+    def cond(s: _StageState):
+        return (~s.done) & (s.it < max_iters) & ~shrunk(s)
+
+    def body(s: _StageState):
+        limit = fr.frontier_limit(s.it, s.active_m, sample_m, sampling)
+        L = step(s.L, s.it, s.src, s.dst, limit)
+        visited = s.visited + limit.astype(jnp.float32)
+        done = fr.gate_sampling_done(
+            fr.masked_converged_early(L, s.src, s.dst, s.active_m),
+            s.it, sampling)
+        it1 = s.it + 1
+        src2, dst2, active2 = fr.apply_compaction(
+            L, s.src, s.dst, s.active_m, it1, sampling=sampling,
+            compact_every=compact_every, n_vertices=n_vertices)
+        return _StageState(L=L, it=it1, done=done, src=src2, dst=dst2,
+                           active_m=active2, visited=visited)
+
+    out = jax.lax.while_loop(
+        cond, body,
+        _StageState(L=L0, it=jnp.asarray(it0, jnp.int32),
+                    done=jnp.array(False), src=src, dst=dst,
+                    active_m=jnp.asarray(active0, jnp.int32),
+                    visited=jnp.asarray(visited0, jnp.float32)))
+    # compress between stages too: idempotent at the fixed point, and a
+    # shallower pointer forest only speeds the next stage's gathers
+    return (fr.compress_full(out.L), out.it, out.done, out.src, out.dst,
+            out.active_m, out.visited)
+
+
+def staged_adaptive_labels(
+    src: jax.Array,
+    dst: jax.Array,
+    n_vertices: int,
+    init_labels: Optional[jax.Array] = None,
+    *,
+    variant: str = "C-2",
+    max_iters: int = 100_000,
+    warmup: int = 2,
+    async_compress: int = 1,
+    backend: str = "xla",
+    plan=None,
+    sampling: int = 0,
+    compact_every: int = 0,
+    vmem_limit_bytes: Optional[int] = None,
+):
+    """Host-driven staged fixpoint; same contract as ``contour_labels``.
+
+    Returns ``(labels, n_iterations, converged, edges_visited)``.  Must be
+    called eagerly (it reads ``active_m`` between stages); callers under a
+    trace use the masked schedule instead (``solvers._contour_solver``
+    guards on tracers).
+    """
+    if variant == "C-Syn":
+        raise ValueError(
+            "C-Syn is the Alg.-1-verbatim reference and does not take the "
+            "work-adaptive schedule; use C-2/C-m (or any async variant) "
+            "with sampling/compact_every")
+    if sampling < 0 or compact_every < 0:
+        raise ValueError("sampling and compact_every must be >= 0, got "
+                         f"{sampling} / {compact_every}")
+    statics = dict(variant=variant, warmup=warmup,
+                   async_compress=async_compress, backend=backend,
+                   plan=plan, sampling=sampling, max_iters=max_iters,
+                   n_vertices=n_vertices,
+                   vmem_limit_bytes=vmem_limit_bytes)
+    L = lab.resolve_init_labels(init_labels, n_vertices, src.dtype)
+    it = jnp.int32(0)
+    visited = jnp.float32(0)
+    active = jnp.int32(src.shape[0])
+
+    if sampling > 0:
+        sm = fr.sample_prefix_m(int(src.shape[0]))
+        L, src, dst, active, visited = _sampling_stage(
+            src[:sm], dst[:sm], src, dst, L, **statics)
+        it = jnp.int32(min(sampling, max_iters))
+
+    # slice straight away when the filter already collapsed the frontier
+    first = True
+    while True:
+        m_cur = int(src.shape[0])
+        if not first or sampling > 0:
+            am = int(active)
+            new_m = max(MIN_STAGE_EDGES, next_pow2(am))
+            if new_m < m_cur:
+                src, dst = src[:new_m], dst[:new_m]
+        first = False
+        L, it, done, src, dst, active, visited = _stage_fixpoint(
+            src, dst, L, it, visited, active, compact_every=compact_every,
+            allow_exit=True, **statics)
+        if bool(done) or int(it) >= max_iters:
+            return L, it, done, visited
+        am = int(active)
+        new_m = max(MIN_STAGE_EDGES, next_pow2(am))
+        if new_m >= int(src.shape[0]):
+            # cannot shrink further — finish at this capacity
+            L, it, done, src, dst, active, visited = _stage_fixpoint(
+                src, dst, L, it, visited, active,
+                compact_every=compact_every, allow_exit=False, **statics)
+            return L, it, done, visited

@@ -1,0 +1,94 @@
+"""Per-platform VMEM budget and the whole-L ceiling derived from it.
+
+The scalar ``"pallas"`` kernel keeps the entire int32 label array resident
+in VMEM alongside its edge blocks, so its vertex ceiling is a function of
+the *platform's* VMEM size — not the magic ``3_000_000`` the seed
+hard-coded.  This module owns that derivation:
+
+* :func:`vmem_budget_bytes` — the per-core VMEM budget.  Resolution
+  order: explicit ``override`` argument (threaded from
+  ``SolveOptions.vmem_limit_bytes``), the ``REPRO_VMEM_BYTES`` environment
+  variable, a device-reported value when the runtime exposes one, then
+  the per-platform table (16 MiB — TPU v2–v5 all ship >= 16 MiB/core;
+  non-TPU hosts only ever run Pallas in interpret mode, where the number
+  gates shape sanity, not real memory).
+* :func:`whole_l_vmem_ceiling` — the max ``n_vertices`` whose whole-L
+  int32 array still leaves room for edge blocks: three quarters of the
+  budget for ``L`` (the kernel double-buffers edge blocks in the rest),
+  four bytes per label.  At the default 16 MiB budget this lands at
+  3,145,728 — the same regime as the seed's hand-picked 3M constant, now
+  derived instead of asserted.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+ENV_VMEM_BYTES = "REPRO_VMEM_BYTES"
+
+# Conservative per-core VMEM for platforms we can meet; the TPU figure is
+# the v2/v3 baseline (newer cores have more — report it via the env var
+# or SolveOptions.vmem_limit_bytes to raise the ceiling).
+_PLATFORM_VMEM_BYTES = {
+    "tpu": 16 * 1024 * 1024,
+    "gpu": 16 * 1024 * 1024,   # shared-memory-sized stand-in
+    "cpu": 16 * 1024 * 1024,   # interpret mode: shape sanity only
+}
+_DEFAULT_VMEM_BYTES = 16 * 1024 * 1024
+
+# Fraction of the budget the whole-L tile may occupy; the rest holds the
+# kernel's double-buffered edge blocks and scratch.
+_WHOLE_L_FRACTION_NUM = 3
+_WHOLE_L_FRACTION_DEN = 4
+_LABEL_BYTES = 4  # int32 labels
+
+
+def _device_vmem_bytes(platform: str) -> Optional[int]:
+    """Runtime-reported VMEM when the backend exposes it (best effort)."""
+    try:
+        for dev in jax.local_devices():
+            if dev.platform != platform:
+                continue
+            for attr in ("vmem_size_bytes", "core_memory_size_bytes"):
+                v = getattr(dev, attr, None)
+                if isinstance(v, int) and v > 0:
+                    return v
+    except RuntimeError:
+        pass  # no backend initialised (e.g. AOT planning host)
+    return None
+
+
+def vmem_budget_bytes(platform: Optional[str] = None,
+                      override: Optional[int] = None) -> int:
+    """Resolved per-core VMEM budget in bytes (always > 0)."""
+    if override is not None:
+        if int(override) <= 0:
+            raise ValueError(f"vmem budget override must be > 0, got "
+                             f"{override}")
+        return int(override)
+    env = os.environ.get(ENV_VMEM_BYTES)
+    if env:
+        try:
+            val = int(env)
+        except ValueError as exc:
+            raise ValueError(
+                f"{ENV_VMEM_BYTES}={env!r} is not an integer byte count"
+            ) from exc
+        if val <= 0:
+            raise ValueError(f"{ENV_VMEM_BYTES} must be > 0, got {val}")
+        return val
+    platform = platform or jax.default_backend()
+    reported = _device_vmem_bytes(platform)
+    if reported is not None:
+        return reported
+    return _PLATFORM_VMEM_BYTES.get(platform, _DEFAULT_VMEM_BYTES)
+
+
+def whole_l_vmem_ceiling(platform: Optional[str] = None,
+                         vmem_bytes: Optional[int] = None) -> int:
+    """Max ``n_vertices`` the scalar whole-L-resident kernel can take."""
+    budget = vmem_budget_bytes(platform, override=vmem_bytes)
+    return (budget * _WHOLE_L_FRACTION_NUM
+            // _WHOLE_L_FRACTION_DEN) // _LABEL_BYTES

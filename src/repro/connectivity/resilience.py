@@ -53,6 +53,7 @@ import jax
 import numpy as np
 
 from repro.connectivity import distributed as dist
+from repro.connectivity import solvers as _solvers
 from repro.connectivity.options import SolveOptions
 from repro.connectivity.result import ComponentResult
 from repro.connectivity.solve import make_result, resolve_warm_start
@@ -252,7 +253,12 @@ def resilient_distributed_contour(
     stats = RecoveryStats(restarts=0, shrinks=0, checkpoints=0, blocks=0,
                           mesh_history=[tuple(mesh.devices.shape)],
                           events=[])
-    provenance: list = []
+    # resolve the execution plan once for the whole elastic solve (shrinks
+    # change the mesh, not the graph size, so the plan is stable) and lead
+    # the provenance trail with it
+    backend, plan = _solvers.resolve_backend_plan(
+        graph.n_vertices, graph.n_edges, opts)
+    provenance: list = [plan.provenance_entry()]
     L = resolve_warm_start(opts.warm_start, graph.n_vertices)
     if manager is not None and manager.latest_step() is not None:
         state, _ = manager.restore({"labels": np.int64(0)})
@@ -292,7 +298,8 @@ def resilient_distributed_contour(
                 local_rounds=opts.local_rounds,
                 max_iters=min(block_rounds, max_total - iterations),
                 async_compress=opts.async_compress,
-                backend=opts.backend,
+                backend=backend,
+                plan=plan,
                 init_labels=L,
                 sampling=opts.sampling,
                 compact_every=opts.compact_every)

@@ -33,11 +33,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.connectivity import minmap
+from repro.connectivity import planner as _planner
 from repro.connectivity.options import SolveOptions
 from repro.runtime.recovery import is_transient_error
 from repro.connectivity.registry import SolverSpec, get_solver
 from repro.connectivity.result import ComponentResult
 from repro.graphs.structs import Graph
+
+# Solver families that route sweeps through the kernel dispatch layer and
+# therefore carry a resolved ExecutionPlan (recorded in provenance).
+_PLANNED_SOLVERS = ("contour", "distributed")
 
 
 def resolve_warm_start(warm_start, n_vertices: int):
@@ -162,22 +167,51 @@ def solve(
     if init is not None and not spec.supports_warm_start:
         raise ValueError(f"solver {spec.name!r} does not support warm "
                          "starts")
-    provenance = None
+    plan = None
+    if spec.name in _PLANNED_SOLVERS:
+        # Resolve the execution plan once at the facade (pinned > tuning
+        # cache for "auto" > heuristic tables) and pin it into the options
+        # so the solver, the provenance record and any retry all see the
+        # same plan.
+        from repro.connectivity.solvers import resolve_backend_plan
+        _, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
+                                       opts)
+        opts = opts.replace(plan=plan)
+    provenance = []
     try:
         out = spec.fn(graph, opts, init)
+        if plan is not None:
+            provenance.append(plan.provenance_entry())
     except Exception as exc:
         # Graceful degradation (DESIGN.md §12): a failed non-XLA kernel
         # launch (Pallas lowering/compile/launch error on a host without
         # the toolchain) falls back to the XLA reference path instead of
         # failing the request.  Caller bugs (ValueError/TypeError/...)
         # and injected SimulatedFaults propagate untouched.
-        if (not opts.kernel_fallback or opts.backend == "xla"
+        backend = (plan.backend if plan is not None
+                   and opts.backend == "auto" else opts.backend)
+        if (not opts.kernel_fallback or backend == "xla"
                 or spec.runs_on != "device" or not is_transient_error(exc)):
             raise
-        out = spec.fn(graph, opts.replace(backend="xla", plan=None), init)
-        provenance = (
-            f"kernel_fallback:{opts.backend}->xla "
-            f"({type(exc).__name__}: {str(exc)[:120]})",)
+        try:
+            # demote this size bucket to XLA in the tuning cache — with a
+            # TTL, so the failed backend is retried/retuned later instead
+            # of being pinned out forever
+            _planner.record_kernel_failure(
+                graph.n_vertices, graph.n_edges, failed_backend=backend)
+        except Exception:
+            pass  # a cache write must never break the degradation path
+        retry_opts = opts.replace(backend="xla", plan=None)
+        out = spec.fn(graph, retry_opts, init)
+        provenance.append(
+            f"kernel_fallback:{backend}->xla "
+            f"({type(exc).__name__}: {str(exc)[:120]})")
+        if spec.name in _PLANNED_SOLVERS:
+            from repro.connectivity.solvers import resolve_backend_plan
+            _, retry_plan = resolve_backend_plan(
+                graph.n_vertices, graph.n_edges, retry_opts)
+            provenance.append(
+                retry_plan.replace(origin="fallback").provenance_entry())
     labels, iterations, converged, edges_visited = solver_output(out)
     return make_result(labels, iterations, converged, edges_visited,
                        provenance=provenance)

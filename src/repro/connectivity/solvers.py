@@ -15,36 +15,62 @@ Five families, one signature (DESIGN.md §9 maps them onto the paper):
 """
 from __future__ import annotations
 
+import jax
+
 from repro.connectivity import contour as _contour
 from repro.connectivity import distributed as _distributed
 from repro.connectivity import fastsv as _fastsv
 from repro.connectivity import lp as _lp
+from repro.connectivity import planner as _planner
 from repro.connectivity import unionfind as _unionfind
+from repro.connectivity.planner import staged as _staged
 from repro.connectivity.registry import SolverSpec, register_solver
-from repro.kernels.contour_mm import ops as mm_ops
 
 
 def resolve_backend_plan(n_vertices: int, n_edges: int, opts):
     """Concrete (backend, plan) for a solve.
 
-    ``backend="auto"`` resolves through :func:`plan_contour_kernel` — the
-    shared autotune layer — unless the caller pinned an explicit plan.
+    Resolution goes through the execution-plan layer
+    (:func:`repro.connectivity.planner.resolve_plan`): a plan pinned in
+    ``opts.plan`` wins; otherwise ``backend="auto"`` consults the tuning
+    cache and falls back to the heuristic tables, while an explicit
+    backend takes the tables with that backend substituted.  Always
+    returns a concrete backend and an :class:`planner.ExecutionPlan`
+    (legacy ``KernelPlan`` pins are lifted).
     """
-    plan = opts.plan
-    backend = opts.backend
-    if backend == "auto":
-        if plan is None:
-            plan = mm_ops.plan_contour_kernel(n_vertices, n_edges)
-        backend = plan.backend
+    plan = _planner.resolve_plan(n_vertices, n_edges, backend=opts.backend,
+                                 plan=opts.plan)
+    backend = plan.backend if opts.backend == "auto" else opts.backend
     return backend, plan
 
 
 def _contour_solver(graph, opts, init_labels):
     backend, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
                                          opts)
+    variant = opts.variant or "C-2"
+    adaptive = opts.sampling > 0 or opts.compact_every > 0
+    if (adaptive and variant != "C-Syn"
+            and plan.compact_schedule == "staged"
+            and not isinstance(graph.src, jax.core.Tracer)):
+        # physically staged frontier: host-driven stage loop, edge arrays
+        # really shrink.  Unavailable under an enclosing trace (vmap'd
+        # solve_batch, user jit) — those keep the masked in-loop schedule,
+        # which is bit-identical at the fixed point.
+        return _staged.staged_adaptive_labels(
+            graph.src, graph.dst, graph.n_vertices, init_labels,
+            variant=variant,
+            max_iters=opts.max_iters,
+            warmup=opts.warmup,
+            async_compress=opts.async_compress,
+            backend=backend,
+            plan=plan,
+            sampling=opts.sampling,
+            compact_every=opts.compact_every,
+            vmem_limit_bytes=opts.vmem_limit_bytes,
+        )
     return _contour.contour_labels(
         graph.src, graph.dst, graph.n_vertices, init_labels,
-        variant=opts.variant or "C-2",
+        variant=variant,
         max_iters=opts.max_iters,
         warmup=opts.warmup,
         async_compress=opts.async_compress,
@@ -52,6 +78,7 @@ def _contour_solver(graph, opts, init_labels):
         plan=plan,
         sampling=opts.sampling,
         compact_every=opts.compact_every,
+        vmem_limit_bytes=opts.vmem_limit_bytes,
     )
 
 
@@ -61,13 +88,16 @@ def _distributed_solver(graph, opts, init_labels):
             "the 'distributed' solver needs SolveOptions.mesh (a "
             "jax.sharding.Mesh); for single-device solves use "
             "algorithm='contour'")
+    backend, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
+                                         opts)
     return _distributed.distributed_contour(
         graph, opts.mesh,
         edge_axes=tuple(opts.edge_axes),
         local_rounds=opts.local_rounds,
         max_iters=opts.max_iters,
         async_compress=opts.async_compress,
-        backend=opts.backend,
+        backend=backend,
+        plan=plan,
         init_labels=init_labels,
         sampling=opts.sampling,
         compact_every=opts.compact_every,

@@ -69,6 +69,7 @@ import numpy as np
 from repro.connectivity import distributed as dist
 from repro.connectivity import frontier as fr
 from repro.connectivity import minmap as lab
+from repro.connectivity import planner as _planner
 from repro.connectivity.contour import _make_step
 from repro.connectivity.options import SolveOptions
 from repro.connectivity.result import ComponentResult
@@ -266,9 +267,11 @@ class StreamingConnectivity:
         self._edges_visited = jnp.float32(0)
         self._snap: Optional[ComponentResult] = None
         self.fault_injector = fault_injector
-        # degradation events survived by this stream (kernel fallbacks);
-        # surfaced through snapshot().provenance
+        # degradation events survived by this stream (kernel fallbacks)
+        # plus the resolved execution plan of each distinct per-batch
+        # resolution; surfaced through snapshot().provenance
         self._provenance: list = []
+        self._last_plan_entry: Optional[str] = None
 
     # -- introspection ---------------------------------------------------
     @property
@@ -444,15 +447,31 @@ class StreamingConnectivity:
                     or self._opts.backend == "xla"
                     or not is_transient_error(exc)):
                 raise
-            out = self._delta_solve_backend(
-                src_p, dst_p, pad_k, k,
-                self._opts.replace(backend="xla", plan=None))
+            try:
+                # TTL'd demotion: later batches (and later streams) in
+                # this size bucket resolve straight to XLA until it lapses
+                _planner.record_kernel_failure(
+                    self._n_cap, pad_k,
+                    failed_backend=self._opts.backend)
+            except Exception:
+                pass  # cache writes must never break the fallback
             self._provenance.append(
                 f"kernel_fallback:{self._opts.backend}->xla "
                 f"(batch {self._n_batches}, {type(exc).__name__}: "
                 f"{str(exc)[:120]})")
+            out = self._delta_solve_backend(
+                src_p, dst_p, pad_k, k,
+                self._opts.replace(backend="xla", plan=None))
             self._snap = None
             return out
+
+    def _record_plan(self, plan) -> None:
+        """Append the resolved plan to provenance when it changes."""
+        entry = plan.provenance_entry()
+        if entry != self._last_plan_entry:
+            self._provenance.append(entry)
+            self._last_plan_entry = entry
+            self._snap = None
 
     def _delta_solve_backend(self, src_p, dst_p, pad_k: int, k: int, opts):
         if opts.mesh is not None:
@@ -460,6 +479,8 @@ class StreamingConnectivity:
             # inside delta_converge); self-loop padding maps to
             # self-loops.  The replica spans the label *capacity* so
             # its shape matches the resident labels.
+            backend, plan = resolve_backend_plan(self._n_cap, pad_k, opts)
+            self._record_plan(plan)
             return dist.distributed_contour(
                 Graph(src=self._labels[src_p], dst=self._labels[dst_p],
                       n_vertices=self._n_cap),
@@ -468,12 +489,14 @@ class StreamingConnectivity:
                 local_rounds=opts.local_rounds,
                 max_iters=opts.max_iters,
                 async_compress=opts.async_compress,
-                backend=opts.backend,
+                backend=backend,
+                plan=plan,
                 init_labels=self._labels,
                 sampling=opts.sampling,
                 compact_every=opts.compact_every,
                 n_active=k)
         backend, plan = resolve_backend_plan(self._n_cap, pad_k, opts)
+        self._record_plan(plan)
         return delta_converge(
             src_p, dst_p, self._labels, jnp.int32(k),
             variant=opts.variant,

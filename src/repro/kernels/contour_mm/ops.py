@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -41,22 +42,35 @@ import jax.numpy as jnp
 
 from repro.connectivity import frontier as fr
 from repro.connectivity import minmap as lab
+from repro.connectivity.planner import vmem as _vmem
+from repro.connectivity.planner.heuristics import heuristic_plan
 from repro.graphs.structs import Graph
 from repro.kernels.contour_mm.blocked import (_round_up,
-                                              binned_scatter_min_pallas)
+                                              binned_scatter_min_pallas,
+                                              fused_relax_pallas)
 from repro.kernels.contour_mm.kernel import mm2_pallas
 
 BACKENDS = ("auto", "xla", "pallas", "pallas_blocked")
 
 # Above this vertex count a fully VMEM-resident int32 L no longer fits the
-# ~16 MiB VMEM budget alongside edge blocks (kernel.py header) — the scalar
-# "pallas" backend is invalid and blocking is mandatory.
-WHOLE_L_VMEM_CEILING = 3_000_000
+# platform's VMEM budget alongside edge blocks (kernel.py header) — the
+# scalar "pallas" backend is invalid and blocking is mandatory.  Derived
+# from the queried/declared VMEM budget (planner.vmem), overridable via
+# SolveOptions.vmem_limit_bytes or $REPRO_VMEM_BYTES; this module-level
+# snapshot exists for back-compat imports (the dispatch path re-derives).
+WHOLE_L_VMEM_CEILING = _vmem.whole_l_vmem_ceiling()
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelPlan:
-    """Resolved backend + tile sizes for one graph size (hashable/static)."""
+    """Resolved backend + tile sizes for one graph size (hashable/static).
+
+    Legacy shape — the execution-plan layer
+    (:class:`repro.connectivity.planner.ExecutionPlan`) supersedes it,
+    adding the compaction schedule, relabel fusion and plan origin.  Kept
+    so pinned plans in existing call sites keep working; every consumer
+    accepts either (``ExecutionPlan.from_kernel_plan`` lifts this).
+    """
 
     backend: str                # concrete: "xla" | "pallas" | "pallas_blocked"
     block_edges: int = 512      # edge block of the scalar pallas kernel
@@ -70,41 +84,21 @@ def plan_contour_kernel(
     n_edges: int,
     platform: Optional[str] = None,
 ) -> KernelPlan:
-    """Autotune heuristics: pick backend + tile sizes for a graph size.
+    """Deprecated: use :func:`repro.connectivity.planner.resolve_plan`.
 
-    Off-TPU the only compilable backend is XLA scatter-min.  On TPU the
-    blocked kernel is always eligible (no ceiling); tile sizes balance the
-    one-hot combine work (∝ ``label_block`` per update) against per-bin
-    padding waste (∝ ``n_blocks·chunk_updates``):
-
-    * small graphs waste least with one or two tiles spanning all of L;
-    * large graphs hold ``label_block`` at 2048 (8 KiB tile, 1 MiB one-hot
-      buffer at chunk 128) and scale ``chunk_updates`` with edge density so
-      sparse bins do not drown in padding.
+    Thin shim over the planner's heuristic tables, kept for one
+    deprecation cycle.  It returns the legacy :class:`KernelPlan` (no
+    schedule/fusion fields) and never consults the tuning cache.
     """
-    platform = platform or jax.default_backend()
-    if platform != "tpu":
-        # Pallas TPU kernels cannot compile here; if a caller forces a
-        # pallas backend anyway it runs in interpret (validation) mode.
-        return KernelPlan(backend="xla", interpret=True)
-    if n_vertices <= 4096:
-        # single tile: the blocked kernel degenerates to a whole-L
-        # vectorized sweep with zero binning waste
-        label_block = max(256, _round_up(n_vertices, 128))
-        chunk = 128
-    else:
-        label_block = 2048
-        # denser update streams amortise more padding; cap the one-hot
-        # buffer at chunk*label_block = 512Ki elements (2 MiB)
-        chunk = 64 if n_edges < 8 * n_vertices else 256
-    block_edges = 512 if n_edges < 1 << 20 else 2048
-    return KernelPlan(
-        backend="pallas_blocked",
-        block_edges=block_edges,
-        label_block=label_block,
-        chunk_updates=chunk,
-        interpret=False,
-    )
+    warnings.warn(
+        "plan_contour_kernel is deprecated; use "
+        "repro.connectivity.planner.resolve_plan (measured, cached) or "
+        "planner.heuristic_plan (the same tables, richer plan)",
+        DeprecationWarning, stacklevel=2)
+    p = heuristic_plan(n_vertices, n_edges, platform)
+    return KernelPlan(backend=p.backend, block_edges=p.block_edges,
+                      label_block=p.label_block,
+                      chunk_updates=p.chunk_updates, interpret=p.interpret)
 
 
 def _pad_edges(src, dst, multiple: int):
@@ -135,15 +129,29 @@ def mm_relax_backend(
     interpret: Optional[bool] = None,
     platform: Optional[str] = None,
     edge_limit: Optional[jax.Array] = None,
+    fuse: Optional[bool] = None,
+    vmem_limit_bytes: Optional[int] = None,
 ) -> jax.Array:
     """One MM^order sweep on the chosen backend (trace-level, not jitted).
 
-    ``None`` tile parameters resolve from :func:`plan_contour_kernel`,
-    including ``interpret`` (False on TPU, True elsewhere — validation
-    mode).  ``platform`` overrides the plan's target platform for AOT
-    lowering from a different host (e.g. ``.lower()``-ing a TPU program on
-    a CPU dry-run host).  This is the single entry every layer routes
-    sweeps through.
+    ``None`` tile parameters resolve from the planner's heuristic tables
+    (``planner.heuristic_plan``), including ``interpret`` (False on TPU,
+    True elsewhere — validation mode).  The tables only — never the
+    tuning cache: this resolution happens inside jitted fixpoints, where
+    it must stay a pure function of (shape, platform) so compiled
+    programs (and the bench HLO-identity gate) are reproducible.  Cache
+    hits are applied by ``planner.resolve_plan`` at the solve facade.
+    ``platform`` overrides the plan's target platform for AOT lowering
+    from a different host (e.g. ``.lower()``-ing a TPU program on a CPU
+    dry-run host).  This is the single entry every layer routes sweeps
+    through.
+
+    ``fuse`` opts the blocked backend into the fused relabel+scatter-min
+    kernel (one Pallas pass instead of XLA gathers + radix binning +
+    scatter kernel); it applies in the single-tile order-2 regime and
+    falls back to the binned pipeline otherwise.  ``vmem_limit_bytes``
+    overrides the platform VMEM budget behind the scalar kernel's
+    whole-L ceiling.
 
     ``edge_limit`` is the work-adaptive frontier bound (a traced int32
     scalar): only the first ``edge_limit`` edges contribute updates.  The
@@ -156,7 +164,7 @@ def mm_relax_backend(
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     n = int(L.shape[0])
     m = int(src.shape[0])
-    plan = plan_contour_kernel(n, m, platform=platform)
+    plan = heuristic_plan(n, m, platform)
     if backend == "auto":
         backend = plan.backend
     block_edges = plan.block_edges if block_edges is None else block_edges
@@ -164,6 +172,7 @@ def mm_relax_backend(
     chunk_updates = (plan.chunk_updates if chunk_updates is None
                      else chunk_updates)
     interpret = plan.interpret if interpret is None else interpret
+    fuse = plan.fuse_relabel if fuse is None else fuse
 
     edge_mask = None
     if edge_limit is not None:
@@ -181,11 +190,14 @@ def mm_relax_backend(
             raise ValueError(
                 "the scalar 'pallas' kernel is 2-order only; use "
                 "'pallas_blocked' or 'xla' for order != 2")
-        if n > WHOLE_L_VMEM_CEILING:
+        ceiling = _vmem.whole_l_vmem_ceiling(platform,
+                                             vmem_bytes=vmem_limit_bytes)
+        if n > ceiling:
             raise ValueError(
                 f"n_vertices={n} exceeds the scalar 'pallas' kernel's "
-                f"whole-L VMEM ceiling ({WHOLE_L_VMEM_CEILING}); use "
-                "'pallas_blocked' (label-tiled, no ceiling) or 'xla'")
+                f"whole-L VMEM ceiling ({ceiling}); use 'pallas_blocked' "
+                "(label-tiled, no ceiling) or 'xla', or raise the budget "
+                f"via SolveOptions.vmem_limit_bytes / ${_vmem.ENV_VMEM_BYTES}")
         if edge_mask is not None:
             src = jnp.where(edge_mask, src, 0)
             dst = jnp.where(edge_mask, dst, 0)
@@ -193,6 +205,13 @@ def mm_relax_backend(
         return mm2_pallas(src_p, dst_p, L, block_edges=block_edges,
                           interpret=interpret)
     # pallas_blocked
+    if fuse and order == 2 and max(128, _round_up(n, 128)) <= label_block:
+        # single-tile regime: one Pallas pass does gathers (relabel) and
+        # all four scatter-min combines — no update-stream materialisation,
+        # no radix binning, no argsort
+        return fused_relax_pallas(
+            L, src, dst, chunk_edges=chunk_updates, interpret=interpret,
+            edge_limit=edge_limit)
     t, v = lab.mm_update_stream(L, src, dst, order)
     valid = None
     if edge_mask is not None:
@@ -207,7 +226,7 @@ def mm_relax_backend(
 @functools.partial(
     jax.jit,
     static_argnames=("backend", "order", "block_edges", "label_block",
-                     "chunk_updates", "interpret", "platform"),
+                     "chunk_updates", "interpret", "platform", "fuse"),
 )
 def contour_mm_step(
     src: jax.Array,
@@ -221,12 +240,13 @@ def contour_mm_step(
     chunk_updates: Optional[int] = None,
     interpret: Optional[bool] = None,
     platform: Optional[str] = None,
+    fuse: Optional[bool] = None,
 ) -> jax.Array:
     """One MM sweep over all edges. Returns the updated label array."""
     return mm_relax_backend(
         L, src, dst, order=order, backend=backend, block_edges=block_edges,
         label_block=label_block, chunk_updates=chunk_updates,
-        interpret=interpret, platform=platform)
+        interpret=interpret, platform=platform, fuse=fuse)
 
 
 class _FixState(NamedTuple):
@@ -239,7 +259,7 @@ class _FixState(NamedTuple):
     jax.jit,
     static_argnames=("backend", "order", "block_edges", "label_block",
                      "chunk_updates", "interpret", "platform", "max_iters",
-                     "sampling", "compact_every"),
+                     "sampling", "compact_every", "fuse"),
 )
 def contour_cc_fixpoint(
     graph: Graph,
@@ -254,6 +274,7 @@ def contour_cc_fixpoint(
     max_iters: int = 10_000,
     sampling: int = 0,
     compact_every: int = 0,
+    fuse: Optional[bool] = None,
 ):
     """Iterate the kernel to the connectivity fixed point, fully on device.
 
@@ -285,7 +306,7 @@ def contour_cc_fixpoint(
                 L, src, dst, order=order, backend=backend,
                 block_edges=block_edges, label_block=label_block,
                 chunk_updates=chunk_updates, interpret=interpret,
-                platform=platform, edge_limit=limit)
+                platform=platform, edge_limit=limit, fuse=fuse)
             return lab.pointer_jump(L, rounds=1)
 
         L, it, done, _, visited = fr.adaptive_fixpoint(
@@ -302,7 +323,7 @@ def contour_cc_fixpoint(
             s.L, graph.src, graph.dst, order=order, backend=backend,
             block_edges=block_edges, label_block=label_block,
             chunk_updates=chunk_updates, interpret=interpret,
-            platform=platform)
+            platform=platform, fuse=fuse)
         L = lab.pointer_jump(L, rounds=1)
         done = lab.converged_early(L, graph.src, graph.dst)
         return _FixState(L=L, it=s.it + 1, done=done)

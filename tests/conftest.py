@@ -1,7 +1,20 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests must see
 the real (single) CPU device; only the dry-run gets 512 placeholders."""
+import os
+import tempfile
+
 import numpy as np
 import pytest
+
+# Hermetic tuning cache: kernel-fallback demotions and tuner runs write
+# plan entries (planner.cache); pointing the cache at a throwaway file
+# keeps the suite from reading or mutating ~/.cache/repro.  Set before
+# any jax/repro import in this process, respected unless a test already
+# pinned its own path.
+os.environ.setdefault(
+    "REPRO_TUNING_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-test-tuning-"),
+                 "contour_tuning.json"))
 
 
 @pytest.fixture(scope="session")

@@ -143,24 +143,26 @@ def test_fixpoint_backends_agree():
 
 
 def test_dispatch_plan():
-    """The autotune layer: XLA off-TPU; blocked with sane tiles on TPU."""
-    from repro.kernels.contour_mm.ops import plan_contour_kernel
+    """The heuristic tables: XLA off-TPU; blocked with sane tiles on TPU."""
+    from repro.connectivity.planner import heuristic_plan
 
-    cpu = plan_contour_kernel(100_000, 1_000_000, platform="cpu")
+    cpu = heuristic_plan(100_000, 1_000_000, platform="cpu")
     assert cpu.backend == "xla"
     assert cpu.interpret            # forced pallas runs in validation mode
 
-    small = plan_contour_kernel(2_000, 20_000, platform="tpu")
+    small = heuristic_plan(2_000, 20_000, platform="tpu")
     assert small.backend == "pallas_blocked"
     assert small.label_block >= 2_000       # single tile, no binning waste
     assert not small.interpret
+    assert small.fuse_relabel               # single-tile fused pass applies
 
-    big = plan_contour_kernel(50_000_000, 800_000_000, platform="tpu")
+    big = heuristic_plan(50_000_000, 800_000_000, platform="tpu")
     assert big.backend == "pallas_blocked"  # no vertex ceiling
     # one-hot combine buffer stays within a VMEM-friendly budget
     assert big.label_block * big.chunk_updates * 4 <= 4 * 1024 * 1024
+    assert not big.fuse_relabel             # multi-tile: binned pipeline
 
-    auto = plan_contour_kernel(10_000, 80_000)   # this host: not a TPU
+    auto = heuristic_plan(10_000, 80_000)        # this host: not a TPU
     assert auto.backend in ("xla", "pallas_blocked")
 
 
