@@ -36,7 +36,21 @@ Fails (exit 1) when:
   - ``autotune_gate``: the autotuned plan must be >= the heuristic
     prior at geomean over the suite (a row where the tuner kept the
     prior counts as exactly 1.0 — equal configs trace to the identical
-    program).
+    program);
+
+* the out-of-core gate regressed (schema 6, DESIGN.md §15) — all three
+  verdicts re-derived from the raw per-row numbers, never from summary
+  booleans:
+
+  - every chunk-streamed solve must be bit-identical to the in-core
+    oracle;
+  - the per-round surviving-edge chain ``n_edges -> s_0 -> s_1 -> ...``
+    must strictly decrease at every link, with each round's ``edges_in``
+    equal to the previous round's survivors;
+  - some stress row with ``n_edges >= 4 * chunk_bucket`` must keep
+    ``peak_bytes`` under ``8 * n_edges`` (the int32 edge-pair bytes the
+    in-core path would materialise), and some row must take >= 2 rounds
+    (the multi-round path is actually exercised).
 
 For serving artifacts, fails when:
 
@@ -104,6 +118,75 @@ def check(payload: dict) -> list:
         errors.append("schema >= 4 artifact is missing the recovery gate")
     if int(payload.get("schema", 0)) >= 5:
         errors.extend(check_wallclock_gates(payload))
+    if int(payload.get("schema", 0)) >= 6:
+        errors.extend(check_oocore_gate(payload))
+    return errors
+
+
+# one int32 (src, dst) pair — mirrors repro.connectivity.oocore.EDGE_BYTES
+# (duplicated: this checker must stay stdlib-only / importable bare)
+OOCORE_EDGE_BYTES = 8
+
+
+def check_oocore_gate(payload: dict) -> list:
+    """Re-derive the schema-6 out-of-core verdicts from the raw rows.
+
+    Equivalence, decay and the memory bound are each recomputed from the
+    per-row numbers (``rounds`` chain, ``peak_bytes``, ``n_edges``,
+    ``chunk_bucket``) so a hand-edited summary cannot pass a failing
+    artifact.
+    """
+    errors = []
+    oo = payload.get("oocore_gate", {})
+    if not oo:
+        return ["schema >= 6 artifact is missing the out-of-core gate"]
+    stress_proven = False
+    for name, row in oo.items():
+        if row.get("bit_identical") is not True:
+            errors.append(
+                f"oocore row {name!r} labels differ from the in-core "
+                f"oracle")
+        m = int(row.get("n_edges", 0))
+        rounds = row.get("rounds", [])
+        if not rounds:
+            errors.append(f"oocore row {name!r} recorded no rounds")
+            continue
+        expect_in = m
+        for r in rounds:
+            if r.get("edges_in") != expect_in:
+                errors.append(
+                    f"oocore row {name!r} round {r.get('round')}: "
+                    f"edges_in={r.get('edges_in')} breaks the survivor "
+                    f"chain (expected {expect_in})")
+                break
+            if not (r.get("survivors", m) < r.get("edges_in", 0)):
+                errors.append(
+                    f"oocore row {name!r} round {r.get('round')} did not "
+                    f"strictly shrink: survivors={r.get('survivors')} >= "
+                    f"edges_in={r.get('edges_in')}")
+                break
+            expect_in = r.get("survivors")
+        if row.get("stress"):
+            bucket = int(row.get("chunk_bucket", 0))
+            peak = row.get("peak_bytes")
+            if bucket <= 0 or m < 4 * bucket:
+                errors.append(
+                    f"oocore stress row {name!r} is not >= 4x the chunk "
+                    f"budget (m={m}, bucket={bucket})")
+            elif peak is None or peak >= OOCORE_EDGE_BYTES * m:
+                errors.append(
+                    f"oocore stress row {name!r}: peak_bytes={peak} not "
+                    f"below total edge bytes {OOCORE_EDGE_BYTES * m}")
+            else:
+                stress_proven = True
+    if not stress_proven:
+        errors.append(
+            "no oocore stress row proves peak device bytes < total edge "
+            "bytes on a graph >= 4x the chunk budget")
+    if not any(len(r.get("rounds", [])) >= 2 for r in oo.values()):
+        errors.append(
+            "no oocore row exercised a genuine multi-round contraction "
+            "(>= 2 rounds)")
     return errors
 
 
@@ -256,7 +339,11 @@ def check_path(path: str) -> int:
               f"streaming_bit_identical="
               f"{summary.get('streaming_bit_identical')}, "
               f"recovery_bit_identical="
-              f"{summary.get('recovery_bit_identical')})")
+              f"{summary.get('recovery_bit_identical')}, "
+              f"oocore_bit_identical="
+              f"{summary.get('oocore_bit_identical')}, "
+              f"oocore_peak_below_edge_bytes="
+              f"{summary.get('oocore_peak_below_edge_bytes')})")
     return 0
 
 

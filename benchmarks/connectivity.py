@@ -29,6 +29,7 @@ import numpy as np
 import jax
 
 from repro.connectivity import SolveOptions, solve
+from repro.connectivity import oocore as _oocore
 from repro.connectivity import planner as _planner
 from repro.connectivity.contour import VARIANTS, contour_labels
 from repro.graphs import generators as gen
@@ -89,6 +90,26 @@ class Record:
     # labels elementwise-equal to this graph's uncompacted C-2 row
     # (recorded for C-2-cmp only: the bit-identical frontier gate)
     bit_identical: Optional[bool] = None
+    # peak device bytes for the row: the allocator's peak_bytes_in_use
+    # where the backend exposes one (TPU/GPU), else a host-side resident
+    # set estimate (edge list + label working set) — schema 6 addition
+    peak_bytes: Optional[int] = None
+    peak_bytes_source: Optional[str] = None
+
+
+def row_peak_bytes(n_vertices: int, n_edges: int):
+    """(peak_bytes, source) for an in-core bench row.
+
+    ``measured`` is the process-wide allocator peak (monotone across the
+    run — an upper bound for every row); the ``estimated`` fallback is
+    the in-core resident set: the int32 edge list plus the label working
+    set, using the same per-array model as the out-of-core solver.
+    """
+    measured = _oocore.device_peak_bytes()
+    if measured is not None:
+        return int(measured), "measured"
+    return (_oocore.EDGE_BYTES * int(n_edges)
+            + 4 * _oocore.LABEL_ARRAYS * int(n_vertices)), "estimated"
 
 
 def _block(out):
@@ -152,11 +173,13 @@ def bench_graph(name: str, gid: int, graph, *, repeats: int = 2,
         if method in ("C-2-cmp", "C-2-stg") and "C-2" in method_labels:
             bit_identical = bool(np.array_equal(method_labels[method],
                                                 method_labels["C-2"]))
+        peak, peak_src = row_peak_bytes(n, graph.n_edges)
         records.append(Record(
             graph=name, graph_id=gid, n_vertices=n,
             n_edges=graph.n_edges, method=method,
             iterations=iters, time_s=dt, correct=bool(ok),
-            edges_visited=visited, bit_identical=bit_identical))
+            edges_visited=visited, bit_identical=bit_identical,
+            peak_bytes=peak, peak_bytes_source=peak_src))
     return records
 
 
@@ -476,6 +499,7 @@ def records_to_json(records: List[Record], fast: bool = False,
                     frontier_wallclock: Optional[Dict] = None,
                     autotune: Optional[Dict] = None,
                     tuning_cache: Optional[Dict] = None,
+                    oocore: Optional[Dict] = None,
                     ) -> Dict:
     """Machine-readable benchmark artifact (``BENCH_connectivity.json``).
 
@@ -504,7 +528,14 @@ def records_to_json(records: List[Record], fast: bool = False,
       >= 1.0x the heuristic prior.  Both store raw per-side seconds;
       ``check_artifact.py`` re-derives the verdicts from those instead of
       trusting the summary.  ``tuning_cache`` embeds the on-disk tuning
-      cache entries so the artifact records *which* plans were deployed.
+      cache entries so the artifact records *which* plans were deployed;
+    * the **out-of-core gate** (``benchmarks.oocore.run_gate`` — schema 6
+      addition): chunk-streamed solves must land bit-identical to the
+      in-core oracle, shrink the surviving edge set strictly every round,
+      and — on a stress graph at least 4x the chunk budget — keep peak
+      device bytes below the total edge bytes the in-core path would
+      materialise.  All three verdicts are re-derived from the raw
+      per-row numbers by ``check_artifact.py``.
     """
     times = pivot(records, "time_s")
     if gate:
@@ -543,11 +574,16 @@ def records_to_json(records: List[Record], fast: bool = False,
         geo = autotune_geomean(autotune)
         summary["autotune_vs_heuristic_geomean"] = geo
         summary["autotune_ge_heuristic"] = bool(geo >= 1.0 - 1e-9)
+    if oocore:
+        from benchmarks.oocore import summarise as _oocore_summary
+        summary.update(_oocore_summary(oocore))
     schema = 2
     if streaming:
         schema = 3
     if frontier_wallclock and autotune:
         schema = 5
+    if oocore:
+        schema = 6
     return {
         "schema": schema,
         "suite": "paper_connectivity",
@@ -558,6 +594,7 @@ def records_to_json(records: List[Record], fast: bool = False,
         "streaming_gate": streaming or {},
         "frontier_wallclock_gate": frontier_wallclock or {},
         "autotune_gate": autotune or {},
+        "oocore_gate": oocore or {},
         "tuning_cache": tuning_cache or {},
         "records": [dataclasses.asdict(r) for r in records],
     }

@@ -10,6 +10,7 @@ roofline reports:
   scale Delaunay scaling trend             (paper §IV-D)
   dist  distributed shard_map contour      (paper §IV-G analogue)
   dedup MinHash+Contour dedup integration
+  ooc   out-of-core contraction gate       (DESIGN.md §15)
   roof  dry-run roofline tables            (EXPERIMENTS.md §Roofline)
   serve serving-engine traffic + recovery  (DESIGN.md §13)
 
@@ -33,6 +34,7 @@ from benchmarks import (
     fig2_time,
     fig3_speedup_fastsv,
     fig4_speedup_connectit,
+    oocore,
     recovery,
     roofline_report,
     scaling_delaunay,
@@ -49,6 +51,7 @@ SECTIONS = [
     ("distributed_contour", distributed_scaling.main),
     ("dedup_integration", dedup_bench.main),
     ("streaming_vs_scratch", streaming.main),
+    ("oocore_gate", oocore.main),
     ("recovery_overhead", recovery.main),
     ("roofline_report", roofline_report.main),
     # writes BENCH_serving.json itself (traffic SLO + recovery gate)
@@ -108,11 +111,13 @@ def main() -> None:
             fw_gate = connectivity.frontier_wallclock_gate(fast=args.fast)
             tune_gate = connectivity.autotune_gate(fast=args.fast,
                                                    retune=args.retune)
+            oo_gate = oocore.run_gate(fast=args.fast)
             from repro.connectivity import planner as _planner
             payload = connectivity.records_to_json(
                 records, fast=args.fast, gate=gate, streaming=stream_gate,
                 frontier_wallclock=fw_gate, autotune=tune_gate,
-                tuning_cache=_planner.cache.entries())
+                tuning_cache=_planner.cache.entries(),
+                oocore=oo_gate)
             recovery.merge_into_artifact(payload,
                                          recovery.run_gate(fast=args.fast))
             with open(args.json, "w") as f:

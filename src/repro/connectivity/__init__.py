@@ -26,6 +26,12 @@ Streaming (edge micro-batches, per-batch work tracks the delta)::
     eng.same_component(u, v)            # O(1), no re-solve
     final = eng.snapshot()
 
+Out-of-core (edges stream from host memory; device holds O(n) labels
+plus one chunk — problem size decoupled from device memory)::
+
+    chunks = rmat_chunks(scale=26, edge_factor=16, chunk_edges=1 << 20)
+    result = solve_chunks(chunks)       # never materialises all edges
+
 The old per-algorithm entry points in ``repro.core`` remain as deprecation
 shims; new code should import from here (or ``from repro import solve``).
 """
@@ -43,8 +49,10 @@ from repro.connectivity.solve import solve
 from repro.connectivity.batch import solve_batch, stack_graphs
 from repro.connectivity.contour import VARIANTS
 from repro.connectivity.streaming import StreamingConnectivity
+from repro.connectivity.oocore import OutOfCoreContraction, solve_chunks
 from repro.connectivity.resilience import (
     RecoveryStats,
+    oocore_with_recovery,
     resilient_distributed_contour,
     stream_with_recovery,
 )
@@ -56,6 +64,7 @@ __all__ = [
     "ComponentResult",
     "FaultInjector",
     "Graph",
+    "OutOfCoreContraction",
     "RecoveryStats",
     "ShardLossFault",
     "SimulatedFault",
@@ -66,9 +75,11 @@ __all__ = [
     "get_solver",
     "list_solvers",
     "register_solver",
+    "oocore_with_recovery",
     "resilient_distributed_contour",
     "solve",
     "solve_batch",
+    "solve_chunks",
     "solver_specs",
     "stack_graphs",
     "stream_with_recovery",

@@ -1,0 +1,485 @@
+"""Out-of-core multi-round contraction: device memory bounds the *chunk*,
+not the graph (DESIGN.md §15).
+
+Every other solver in the repo materialises the full edge list on device;
+the ROADMAP's billion-edge target cannot (open item 2).  This module
+decouples problem size from device memory following *Near-Optimal
+Massively Parallel Graph Connectivity* (Behnezhad et al.) and ConnectIt's
+multi-round sample-then-finish design (PAPERS.md):
+
+* **Edges live on the host** — as arrays (:class:`ArrayChunks`) or
+  generated on the fly (:class:`~repro.graphs.generators.RmatChunks`,
+  which never holds the full list).  The device holds only the O(n)
+  label array plus one power-of-two edge chunk at a time.
+
+* **Round structure.**  Each round streams every surviving chunk through
+  a **double-buffered** host→device pipeline: the ``jax.device_put`` of
+  chunk ``k+1`` is issued *before* the fold of chunk ``k`` is dispatched,
+  so the transfer overlaps the sweep (both are async), and the resident
+  label array is donated through each fold (no per-chunk copy).  A fold
+  (:func:`_fold_chunk`) rewrites the chunk to current supervertex roots
+  and runs a **bounded** number of local min-mapping sweeps
+  (``SolveOptions.oocore_local_iters``) under the §10 frontier schedule —
+  bounded, not to convergence: per-chunk convergence would reach the
+  global fixpoint in round 1 (the streaming engine's soundness theorem,
+  DESIGN.md §11) and the multi-round structure would be vacuous; bounded
+  local work per machine per round is exactly the MPC model's constraint.
+  One compiled program per (n, chunk-bucket) pair, chunks padded with
+  ``(0, 0)`` self-loop no-ops and swept only up to their real edge count
+  — the same jit-stability discipline as ``streaming.py``.
+
+* **Host-side contraction between rounds.**  After a round the labels are
+  pulled once; every edge of the round's input is relabeled to its
+  endpoints' roots, intra-supervertex edges (``L[u] == L[v]``) are
+  retired, and the survivors are deduped on the unordered root pair — so
+  round ``k+1`` streams only surviving inter-supervertex edges.
+
+  **Soundness:** retiring ``(u, v)`` because ``L[u] == L[v]`` is
+  *permanent* here, unlike inside a device fixpoint (DESIGN.md §10's
+  rewrite-vs-drop hazard): a min-mapping merge never splits, so two
+  vertices that share a root share it forever.  Rewriting survivors to
+  roots is the streaming engine's supervertex rewrite — every kept
+  adjacency connects current roots, and the final star forest resolves
+  retired vertices through their (monotone) pointer chains.  Dedup is
+  sound because edge multiplicity never affects a min-mapping fixpoint.
+
+  **Termination:** a round that streams a non-empty survivor set sweeps
+  at least one inter-root edge, and that scatter-min strictly decreases
+  some label — so at least two roots merge, the swept edge retires, and
+  the deduped survivor count **strictly decreases** every round (the
+  decay the bench artifact gates on).
+
+* **In-core handoff.**  Once the survivors fit one chunk bucket — the
+  planner's VMEM-derived ceiling, ``ExecutionPlan.chunk_bucket``,
+  resolved by :func:`planner.oocore_chunk_bucket` — the ordinary in-core
+  adaptive fixpoint finishes the solve warm-started from the resident
+  labels (sound for the usual monotone-label reason).  The device
+  therefore never holds more than ``chunk_bucket`` edges.  If
+  ``oocore_round_cap`` rounds pass first, the finish is forced anyway:
+  labels stay correct, only the memory bound is waived (and the waiver
+  recorded in provenance).
+
+Recovery (``resilience.oocore_with_recovery``) checkpoints at round
+boundaries — labels plus the surviving-chunk manifest — so a mid-round
+crash replays one round, not the stream: ``chunk(k)`` purity makes the
+replay bit-exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.connectivity import frontier as fr
+from repro.connectivity import minmap as lab
+from repro.connectivity import planner as _planner
+from repro.connectivity.contour import _make_step
+from repro.connectivity.options import SolveOptions
+from repro.connectivity.result import ComponentResult
+from repro.connectivity.solve import make_result, resolve_warm_start
+from repro.graphs.generators import ArrayChunks, EdgeChunks
+from repro.graphs.structs import Graph
+
+# Host-fallback peak-memory model (bytes, int32 everywhere): the device
+# working set is the resident labels (plus pointer-jump/gather
+# temporaries) and one chunk — double-buffered src/dst pairs plus the
+# fold's rewrite/contraction/convergence temporaries.  Deliberately an
+# over-count: the bench gate needs an upper estimate that is still far
+# below the full edge list.
+LABEL_ARRAYS = 3    # labels + compress double-buffer + gather temp
+CHUNK_ARRAYS = 28   # 2x2 double-buffered src/dst + sweep temporaries
+EDGE_BYTES = 8      # one int32 (src, dst) pair — the in-core cost/edge
+
+
+def estimate_peak_bytes(n_vertices: int, chunk_bucket: int) -> int:
+    """Deterministic host-side upper estimate of the resident device
+    bytes of an out-of-core solve (labels + one double-buffered chunk)."""
+    return 4 * (LABEL_ARRAYS * int(n_vertices)
+                + CHUNK_ARRAYS * int(chunk_bucket))
+
+
+def device_peak_bytes(device=None) -> Optional[int]:
+    """``peak_bytes_in_use`` from the device allocator, when the backend
+    exposes it (TPU/GPU); None on hosts without memory stats (CPU)."""
+    try:
+        dev = device if device is not None else jax.local_devices()[0]
+        stats = dev.memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            return int(stats["peak_bytes_in_use"])
+    except Exception:
+        pass
+    return None
+
+
+@functools.partial(
+    jax.jit,
+    donate_argnums=(0,),
+    static_argnames=("variant", "backend", "plan", "warmup",
+                     "async_compress", "local_iters"),
+)
+def _fold_chunk(
+    labels: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    n_active: jax.Array,
+    *,
+    variant: str = "C-2",
+    backend: str = "xla",
+    plan=None,
+    warmup: int = 2,
+    async_compress: int = 1,
+    local_iters: int = 4,
+):
+    """Fold one edge chunk into the resident labels (bounded local work).
+
+    The supervertex rewrite makes the bounded sweeps ordinary Contour on
+    the root graph (as in ``streaming.delta_converge``); ``max_iters``
+    caps them at ``local_iters`` — partial convergence is fine, the
+    host-side inter-round contraction and the final in-core finish carry
+    global convergence.  ``labels`` is donated: the caller rebinds it to
+    the result, so the O(n) array updates in place every chunk.  Returns
+    ``(labels', sweeps, edges_visited)`` with ``labels'`` compressed back
+    to a star forest (the rewrite's precondition for the next chunk).
+    """
+    src = labels[src]
+    dst = labels[dst]
+    step = _make_step(variant, warmup, async_compress, backend, plan)
+    L, it, _, _, visited = fr.adaptive_fixpoint(
+        src, dst, labels, step,
+        n_vertices=labels.shape[0],
+        sampling=0,
+        compact_every=1,
+        max_iters=local_iters,
+        active_m0=n_active)
+    return L, it, visited
+
+
+def _pad_chunk(src: np.ndarray, dst: np.ndarray, bucket: int):
+    """Pad a host chunk to its pow2 bucket with (0, 0) self-loop no-ops
+    and cast to the device's int32 edge dtype."""
+    m = int(src.shape[0])
+    ps = np.zeros(bucket, np.int32)
+    pd = np.zeros(bucket, np.int32)
+    ps[:m] = src
+    pd[:m] = dst
+    return ps, pd, m
+
+
+class OutOfCoreContraction:
+    """Round-structured out-of-core solver (module docstring for theory).
+
+    The round-level API exists so three consumers can share one engine:
+    the registry solver (:func:`oocore_labels` / ``algorithm="oocore"``)
+    just calls :meth:`run`; ``resilience.oocore_with_recovery`` drives
+    :meth:`run_round` with round-boundary checkpoints; the bench reads
+    :attr:`round_counts` and the peak-memory accounting.
+    """
+
+    def __init__(self, chunks, options: Optional[SolveOptions] = None,
+                 *, init_labels=None, fault_injector=None, **overrides):
+        if not isinstance(chunks, EdgeChunks):
+            raise TypeError(
+                f"chunks must be an EdgeChunks source, got "
+                f"{type(chunks).__name__}; wrap host arrays in ArrayChunks "
+                f"or use graphs.rmat_chunks")
+        opts = options if options is not None else SolveOptions()
+        if overrides:
+            opts = opts.replace(**overrides)
+        opts.validate()
+        variant = opts.variant or "C-2"
+        if variant == "C-Syn":
+            raise ValueError(
+                "C-Syn is the Alg.-1-verbatim reference and cannot take "
+                "the out-of-core schedule; use C-2/C-m or any async "
+                "variant")
+        if chunks.n_vertices >= 1 << 31:
+            raise ValueError(
+                f"n_vertices={chunks.n_vertices} exceeds the int32 vertex "
+                f"id space")
+        self.chunks = chunks
+        self.n_vertices = chunks.n_vertices
+        self.fault_injector = fault_injector
+        # plan resolution through the same funnel as every planned solver;
+        # lazy import (solvers registers this module's solver)
+        from repro.connectivity.solvers import resolve_backend_plan
+        backend, plan = resolve_backend_plan(
+            chunks.n_vertices, chunks.n_edges, opts)
+        if plan.chunk_bucket == 0:
+            plan = plan.replace(chunk_bucket=_planner.oocore_chunk_bucket(
+                chunks.n_edges,
+                vmem_limit_bytes=opts.vmem_limit_bytes,
+                requested=opts.oocore_chunk_edges))
+        # a chunk source dictates its own round-0 granularity; the plan
+        # records what actually streams (honest provenance > the table)
+        if chunks.chunk_edges != plan.chunk_bucket:
+            plan = plan.replace(chunk_bucket=chunks.chunk_edges)
+        self.backend = backend
+        self.plan = plan
+        self.bucket = plan.chunk_bucket
+        self.opts = opts.replace(plan=plan)
+        self.round_cap = opts.oocore_round_cap
+        self._statics = dict(
+            variant=variant,
+            backend=backend,
+            plan=plan,
+            warmup=opts.warmup,
+            async_compress=opts.async_compress,
+            local_iters=opts.oocore_local_iters,
+        )
+        init = resolve_warm_start(
+            init_labels if init_labels is not None else opts.warm_start,
+            chunks.n_vertices)
+        self._init_np = (None if init is None
+                         else np.asarray(init, np.int32))
+        self.reset()
+
+    # -- state -----------------------------------------------------------
+    def reset(self) -> None:
+        """Back to the pre-round-0 state (labels = warm start or
+        identity, stream = the source).  Round-0 crash recovery: the
+        source's ``chunk(k)`` purity makes the replay bit-exact."""
+        init = (None if self._init_np is None
+                else jnp.asarray(self._init_np))
+        self.labels = lab.resolve_init_labels(init, self.n_vertices,
+                                              jnp.int32)
+        self.round_index = 0
+        self.iterations = 0
+        self.visited = 0.0
+        self.round_counts: list = []   # deduped survivors after each round
+        self.survivors_src: Optional[np.ndarray] = None
+        self.survivors_dst: Optional[np.ndarray] = None
+        self.finished_streaming = False
+        self.round_cap_exhausted = False
+        self._chunk_counter = 0
+
+    def state_dict(self) -> dict:
+        """Round-boundary snapshot: labels + surviving-chunk manifest +
+        counters.  Everything needed to resume at ``round_index``."""
+        empty = np.zeros(0, np.int32)
+        return {
+            "labels": np.asarray(self.labels),
+            "src": (empty if self.survivors_src is None
+                    else self.survivors_src),
+            "dst": (empty if self.survivors_dst is None
+                    else self.survivors_dst),
+            "round": np.int64(self.round_index),
+            "iterations": np.int64(self.iterations),
+            "visited": np.float64(self.visited),
+            "counts": np.asarray(self.round_counts, np.int64),
+            "finished": np.int64(self.finished_streaming),
+            "exhausted": np.int64(self.round_cap_exhausted),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.labels = jnp.asarray(state["labels"], jnp.int32)
+        self.round_index = int(state["round"])
+        self.iterations = int(state["iterations"])
+        self.visited = float(state["visited"])
+        self.round_counts = [int(c) for c in state["counts"]]
+        self.finished_streaming = bool(int(state["finished"]))
+        self.round_cap_exhausted = bool(int(state["exhausted"]))
+        if self.round_index == 0:
+            self.survivors_src = self.survivors_dst = None
+        else:
+            self.survivors_src = np.asarray(state["src"], np.int32)
+            self.survivors_dst = np.asarray(state["dst"], np.int32)
+
+    def save(self, manager) -> None:
+        manager.save(self.round_index, self.state_dict())
+
+    def restore(self, manager, step: Optional[int] = None) -> None:
+        state, _ = manager.restore(self.state_dict(), step)
+        self.load_state_dict(state)
+
+    # -- the rounds ------------------------------------------------------
+    def _round_source(self) -> EdgeChunks:
+        if self.round_index == 0:
+            return self.chunks
+        return ArrayChunks(self.survivors_src, self.survivors_dst,
+                           self.n_vertices, self.bucket)
+
+    def _stream(self, source: EdgeChunks) -> None:
+        """One double-buffered pass of every chunk of ``source`` through
+        :func:`_fold_chunk`."""
+        n_chunks = source.n_chunks
+        if n_chunks == 0:
+            return
+        its = jnp.int32(0)
+        visited = jnp.float32(0)
+        # prefetch chunk 0; inside the loop chunk k+1's transfer is
+        # issued before chunk k's fold dispatches, so host->device copy
+        # overlaps the sweep (device_put and jit dispatch are both async)
+        ps, pd, m = _pad_chunk(*source.chunk(0), self.bucket)
+        nxt = (jax.device_put(ps), jax.device_put(pd), m)
+        for k in range(n_chunks):
+            cur = nxt
+            if k + 1 < n_chunks:
+                ps, pd, m = _pad_chunk(*source.chunk(k + 1), self.bucket)
+                nxt = (jax.device_put(ps), jax.device_put(pd), m)
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_fail(self._chunk_counter,
+                                               "oocore_chunk")
+            self._chunk_counter += 1
+            src, dst, n_active = cur
+            self.labels, it, v = _fold_chunk(
+                self.labels, src, dst, jnp.int32(n_active),
+                **self._statics)
+            its = its + it
+            visited = visited + v
+        # the only per-round host syncs (contraction pulls labels anyway)
+        self.iterations += int(its)
+        self.visited += float(visited)
+
+    def _contract(self, source: EdgeChunks) -> tuple:
+        """Relabel ``source`` to current roots, drop intra-supervertex
+        edges, dedup on the unordered root pair — host-side, chunk by
+        chunk, so peak host memory is O(chunk + survivors)."""
+        L = np.asarray(self.labels)
+        parts_s, parts_d = [], []
+        for s, d in source:
+            rs, rd = L[s], L[d]
+            keep = rs != rd
+            if keep.any():
+                parts_s.append(rs[keep].astype(np.int64))
+                parts_d.append(rd[keep].astype(np.int64))
+        if not parts_s:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32))
+        rs = np.concatenate(parts_s)
+        rd = np.concatenate(parts_d)
+        lo = np.minimum(rs, rd)
+        hi = np.maximum(rs, rd)
+        _, first = np.unique(lo * np.int64(self.n_vertices) + hi,
+                             return_index=True)
+        first.sort()  # keep the stream order of first occurrences
+        return rs[first].astype(np.int32), rd[first].astype(np.int32)
+
+    def run_round(self) -> dict:
+        """Stream every surviving chunk, then contract host-side.
+
+        Returns the round record ``{"round", "edges_in", "survivors",
+        "chunks"}`` and flips :attr:`finished_streaming` once the
+        survivors fit the chunk bucket (or the round cap is spent).
+        """
+        if self.finished_streaming:
+            raise RuntimeError("streaming already finished; call finish()")
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fail(self.round_index, "oocore_round")
+        source = self._round_source()
+        edges_in = source.n_edges
+        self._stream(source)
+        ssrc, sdst = self._contract(source)
+        self.survivors_src, self.survivors_dst = ssrc, sdst
+        n_surv = int(ssrc.shape[0])
+        prev = self.round_counts[-1] if self.round_counts else None
+        self.round_counts.append(n_surv)
+        self.round_index += 1
+        if n_surv <= self.bucket:
+            self.finished_streaming = True
+        elif self.round_index >= self.round_cap or (prev is not None
+                                                    and n_surv >= prev):
+            # cap spent (or, defensively, a round that made no progress —
+            # provably impossible while survivors are inter-root, see
+            # module docstring, but never spin on a broken invariant):
+            # finish in-core anyway.  Labels stay correct; only the
+            # memory bound is waived, and provenance records the waiver.
+            self.finished_streaming = True
+            self.round_cap_exhausted = True
+        return {"round": self.round_index - 1, "edges_in": edges_in,
+                "survivors": n_surv, "chunks": source.n_chunks}
+
+    def finish(self):
+        """In-core adaptive finish on the surviving edges, warm-started
+        from the resident labels (monotone min-mapping labels make any
+        intermediate state a valid init).  Returns the registry 4-tuple
+        ``(labels, iterations, converged, edges_visited)``.
+        """
+        if not self.finished_streaming:
+            raise RuntimeError("streaming rounds still pending; call "
+                               "run_round() until finished_streaming")
+        if int(self.survivors_src.shape[0]) == 0:
+            # every edge retired: the star forest is the global fixpoint
+            self.labels = fr.compress_full(self.labels)
+            return (self.labels, jnp.int32(self.iterations),
+                    jnp.array(True), jnp.float32(self.visited))
+        from repro.connectivity.solvers import _contour_solver
+        graph = Graph.from_numpy(self.survivors_src, self.survivors_dst,
+                                 self.n_vertices)
+        finish_opts = self.opts.replace(
+            algorithm="contour", plan=None, warm_start=None,
+            # the handoff keeps the caller's frontier schedule; dense
+            # callers still get periodic contraction — the survivors are
+            # exactly the frontier, contracting them is the whole point
+            compact_every=self.opts.compact_every or 1,
+            max_iters=self.opts.max_iters or 100_000)
+        labels, it, done, visited = _contour_solver(graph, finish_opts,
+                                                    self.labels)
+        self.labels = labels
+        self.iterations += int(it)
+        self.visited += float(visited)
+        return (labels, jnp.int32(self.iterations), done,
+                jnp.float32(self.visited))
+
+    def run(self):
+        """Rounds to the handoff point, then the in-core finish."""
+        while not self.finished_streaming:
+            self.run_round()
+        return self.finish()
+
+    # -- reporting -------------------------------------------------------
+    def peak_bytes_estimate(self) -> int:
+        bucket = self.bucket
+        if self.round_cap_exhausted and self.survivors_src is not None:
+            # waived bound: the forced finish materialised the survivors
+            bucket = max(bucket,
+                         _planner.next_pow2(self.survivors_src.shape[0]))
+        return estimate_peak_bytes(self.n_vertices, bucket)
+
+    def round_provenance(self) -> tuple:
+        """The oocore-specific provenance entries — without the plan
+        entry, which ``solve()`` records from its own resolved plan (the
+        registry solver returns these as the optional 5th element)."""
+        entries = [f"oocore:rounds={len(self.round_counts)} "
+                   f"bucket={self.bucket} "
+                   f"decay={','.join(map(str, self.round_counts))}"]
+        if self.round_cap_exhausted:
+            entries.append("oocore_round_cap_exhausted")
+        return tuple(entries)
+
+    def provenance(self) -> tuple:
+        return (self.plan.provenance_entry(),) + self.round_provenance()
+
+
+def oocore_labels(chunks, options: Optional[SolveOptions] = None,
+                  *, init_labels=None, **overrides):
+    """Functional form: solve an :class:`EdgeChunks` source out-of-core.
+
+    Returns the registry 4-tuple plus the optional 5th static-provenance
+    element (the round decay), which ``solve()`` merges into the result;
+    :func:`solve_chunks` wraps everything in a :class:`ComponentResult`.
+    """
+    engine = OutOfCoreContraction(chunks, options, init_labels=init_labels,
+                                  **overrides)
+    return engine.run() + (engine.round_provenance(),)
+
+
+def solve_chunks(chunks, options: Optional[SolveOptions] = None,
+                 *, warm_start=None, **overrides) -> ComponentResult:
+    """``solve()`` for edge streams: out-of-core facade entry.
+
+    Example::
+
+        chunks = rmat_chunks(scale=26, edge_factor=16, chunk_edges=1 << 20)
+        result = solve_chunks(chunks)        # never holds all edges
+
+    ``warm_start``/``SolveOptions`` behave as in :func:`solve`; the
+    resolved plan (including the chunk bucket) and the per-round survivor
+    decay land in ``result.provenance``.
+    """
+    engine = OutOfCoreContraction(chunks, options, init_labels=warm_start,
+                                  **overrides)
+    labels, iterations, converged, visited = engine.run()
+    return make_result(labels, iterations, converged, visited,
+                       provenance=engine.provenance())

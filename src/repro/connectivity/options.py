@@ -68,6 +68,14 @@ class SolveOptions:
     # whole-L ceiling; None = $REPRO_VMEM_BYTES, device query, or the
     # per-platform table (planner.vmem)
     vmem_limit_bytes: Optional[int] = None
+    # out-of-core streaming (algorithm="oocore", DESIGN.md §15): device
+    # edge-chunk budget (0 = derive from the VMEM budget via
+    # planner.oocore_chunk_bucket; rounded up to a power of two), cap on
+    # host-contraction rounds before the in-core finish is forced, and
+    # bounded local min-mapping sweeps folded per chunk per round
+    oocore_chunk_edges: int = 0
+    oocore_round_cap: int = 64
+    oocore_local_iters: int = 4
 
     def replace(self, **updates) -> "SolveOptions":
         """Return a copy with the given fields replaced."""
@@ -97,3 +105,19 @@ class SolveOptions:
         if self.vmem_limit_bytes is not None and self.vmem_limit_bytes <= 0:
             raise ValueError(f"vmem_limit_bytes must be > 0, got "
                              f"{self.vmem_limit_bytes}")
+        if self.oocore_chunk_edges:
+            # deferred: planner.staged pulls in frontier/minmap, and the
+            # planner package itself reaches solve() via autotune
+            from repro.connectivity.planner.staged import MIN_STAGE_EDGES
+            if self.oocore_chunk_edges < MIN_STAGE_EDGES:
+                raise ValueError(
+                    f"oocore_chunk_edges must be 0 (auto) or >= "
+                    f"MIN_STAGE_EDGES ({MIN_STAGE_EDGES}); a chunk of "
+                    f"{self.oocore_chunk_edges} edges would thrash "
+                    f"per-bucket compiles")
+        if self.oocore_round_cap < 1:
+            raise ValueError(f"oocore_round_cap must be >= 1, got "
+                             f"{self.oocore_round_cap}")
+        if self.oocore_local_iters < 1:
+            raise ValueError(f"oocore_local_iters must be >= 1, got "
+                             f"{self.oocore_local_iters}")

@@ -43,9 +43,11 @@ from repro.connectivity.planner.autotune import (
     record_kernel_failure,
 )
 from repro.connectivity.planner.heuristics import (
+    OOCORE_BYTES_PER_EDGE,
     SINGLE_TILE_MAX_N,
     STAGED_MIN_EDGES,
     heuristic_plan,
+    oocore_chunk_bucket,
 )
 from repro.connectivity.planner.plan import (
     BACKENDS,
@@ -66,6 +68,7 @@ __all__ = [
     "BACKENDS",
     "COMPACT_SCHEDULES",
     "ENV_VMEM_BYTES",
+    "OOCORE_BYTES_PER_EDGE",
     "ORIGINS",
     "SINGLE_TILE_MAX_N",
     "STAGED_MIN_EDGES",
@@ -75,6 +78,7 @@ __all__ = [
     "candidate_plans",
     "heuristic_plan",
     "next_pow2",
+    "oocore_chunk_bucket",
     "plan_key",
     "plan_label",
     "record_kernel_failure",

@@ -12,7 +12,8 @@ from typing import Optional
 
 import jax
 
-from repro.connectivity.planner.plan import ExecutionPlan
+from repro.connectivity.planner.plan import ExecutionPlan, next_pow2
+from repro.connectivity.planner.vmem import vmem_budget_bytes
 
 # Past this many edges the staged frontier schedule is worth its extra
 # per-stage compiles on the XLA path: each stage re-enters the while loop
@@ -25,6 +26,13 @@ STAGED_MIN_EDGES = 1 << 15
 # the fused relabel+scatter-min pass is eligible (no update-stream
 # materialisation, no radix binning).
 SINGLE_TILE_MAX_N = 4096
+
+# Out-of-core chunk sizing: per-edge device cost of one resident chunk.
+# A chunk holds int64 src/dst (16 B/edge) double-buffered (32 B/edge),
+# plus the sweep's relabeled copies and contraction temporaries — call it
+# 128 B/edge so the derived chunk plus the O(n) label array stay well
+# inside the VMEM-scale working-set budget the planner already owns.
+OOCORE_BYTES_PER_EDGE = 128
 
 
 def _round_up(x: int, k: int) -> int:
@@ -86,3 +94,31 @@ def heuristic_plan(
         fuse_relabel=fuse,
         origin="heuristic",
     )
+
+
+def oocore_chunk_bucket(
+    n_edges: int,
+    platform: Optional[str] = None,
+    vmem_limit_bytes: Optional[int] = None,
+    requested: int = 0,
+) -> int:
+    """The pow2 edge-chunk bucket the out-of-core streamer runs at.
+
+    ``requested`` (``SolveOptions.oocore_chunk_edges``) wins when set,
+    rounded up to a power of two; otherwise the bucket is derived from
+    the platform VMEM budget at :data:`OOCORE_BYTES_PER_EDGE`.  Either
+    way the result is clamped to ``[MIN_STAGE_EDGES, next_pow2(m)]`` —
+    chunks below the stage floor would thrash compiles, and a chunk
+    larger than the whole graph is just the in-core path.
+    """
+    from repro.connectivity.planner.staged import MIN_STAGE_EDGES
+    if requested and requested > 0:
+        bucket = next_pow2(requested)
+    else:
+        budget = vmem_budget_bytes(platform, override=vmem_limit_bytes)
+        # round *down* to pow2: never exceed the derived byte budget
+        bucket = next_pow2(max(budget // OOCORE_BYTES_PER_EDGE, 1))
+        if bucket * OOCORE_BYTES_PER_EDGE > budget:
+            bucket //= 2
+    ceiling = max(next_pow2(n_edges), MIN_STAGE_EDGES)
+    return max(MIN_STAGE_EDGES, min(bucket, ceiling))

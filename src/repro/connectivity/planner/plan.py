@@ -42,7 +42,8 @@ ORIGINS = ("heuristic", "tuned", "pinned", "fallback")
 # across graphs of similar scale, and the jit cache cannot be fragmented
 # by one entry per exact (n, m).
 _CONFIG_FIELDS = ("backend", "block_edges", "label_block", "chunk_updates",
-                  "interpret", "compact_schedule", "fuse_relabel")
+                  "interpret", "compact_schedule", "fuse_relabel",
+                  "chunk_bucket")
 
 
 def next_pow2(x: int) -> int:
@@ -71,6 +72,7 @@ class ExecutionPlan:
     interpret: bool = False         # Pallas interpreter mode (CPU validation)
     compact_schedule: str = "masked"  # frontier realisation: masked | staged
     fuse_relabel: bool = False      # single-tile fused gather+scatter-min pass
+    chunk_bucket: int = 0           # out-of-core pow2 edge chunk (0 = n/a)
     origin: str = "heuristic"       # heuristic | tuned | pinned | fallback
 
     def validate(self) -> "ExecutionPlan":
@@ -88,6 +90,10 @@ class ExecutionPlan:
             v = getattr(self, f)
             if not isinstance(v, int) or v < 1:
                 raise ValueError(f"{f} must be a positive int, got {v!r}")
+        cb = self.chunk_bucket
+        if not isinstance(cb, int) or cb < 0 or (cb and cb & (cb - 1)):
+            raise ValueError(
+                f"chunk_bucket must be 0 or a power of two, got {cb!r}")
         return self
 
     def replace(self, **updates) -> "ExecutionPlan":
@@ -123,11 +129,12 @@ class ExecutionPlan:
 
     def provenance_entry(self) -> str:
         """The ``plan:`` line recorded in ``ComponentResult.provenance``."""
+        oc = f" chunk={self.chunk_bucket}" if self.chunk_bucket else ""
         return (f"plan:{self.backend} origin={self.origin} "
                 f"schedule={self.compact_schedule} "
                 f"lb={self.label_block} cu={self.chunk_updates} "
                 f"be={self.block_edges} fused={int(self.fuse_relabel)} "
-                f"interpret={int(self.interpret)}")
+                f"interpret={int(self.interpret)}{oc}")
 
     @classmethod
     def from_kernel_plan(cls, plan, origin: str = "pinned"

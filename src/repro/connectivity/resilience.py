@@ -20,6 +20,12 @@ previously train-loop-only runtime machinery (``repro.runtime.*``,
   checkpoint cadence: persistent slow batches force a snapshot *now* so
   a replace-and-restart loses no work.
 
+* :func:`oocore_with_recovery` — round-boundary checkpoint recovery for
+  the out-of-core multi-round solver (DESIGN.md §15): a mid-round crash
+  restores labels + the surviving-chunk manifest from the last committed
+  round and replays one round, not the stream (exact because chunk
+  sources are pure functions of the chunk index).
+
 * :func:`resilient_distributed_contour` — elastic shrink-and-resume for
   distributed solves.  The fixpoint runs in bounded blocks of global
   rounds; between blocks the driver consults a fault injector (and, in
@@ -174,6 +180,80 @@ def stream_with_recovery(
             stats["replayed_batches"] += b - resume
             b = resume
     return eng, stats
+
+
+def oocore_with_recovery(
+    chunks,
+    manager,
+    options: Optional[SolveOptions] = None,
+    *,
+    max_restarts: int = 5,
+    fault_injector: Optional[FaultInjector] = None,
+    recoverable: Tuple[Type[BaseException], ...] = (SimulatedFault,),
+    backoff_base: float = 0.0,
+    backoff_factor: float = 2.0,
+    backoff_cap: float = 30.0,
+    sleep_fn: Callable[[float], None] = time.sleep,
+    on_event: Optional[Callable[[str, int], None]] = None,
+    **overrides,
+) -> tuple[ComponentResult, dict]:
+    """Out-of-core solve with round-boundary checkpoint recovery.
+
+    Drives :class:`~repro.connectivity.oocore.OutOfCoreContraction` one
+    round at a time, checkpointing at every round boundary (labels + the
+    surviving-chunk manifest — the engine's ``state_dict``) through
+    ``manager``'s atomic write-to-tmp-then-rename protocol.  A
+    ``recoverable`` fault mid-round restores the last committed round
+    boundary and replays *that round only*, never the whole stream; a
+    fault inside round 0 replays round 0 from the source, which is exact
+    because chunk sources are pure functions of the chunk index
+    (``EdgeChunks.chunk(k)``).  Replay is bit-exact for the same reason
+    the streaming driver's is: rounds are deterministic, and a fault
+    anywhere before the boundary commit leaves the checkpoint at the
+    previous round's state.
+
+    If ``manager`` already holds a checkpoint the solve *resumes* from it
+    (crash-restart across processes).  Returns ``(result, stats)`` with
+    ``stats`` a :class:`RecoveryStats` holding ``restarts``,
+    ``checkpoints``, ``replayed_rounds`` and ``rounds``.
+    """
+    from repro.connectivity import oocore as _oocore
+    eng = _oocore.OutOfCoreContraction(chunks, options,
+                                       fault_injector=fault_injector,
+                                       **overrides)
+    if manager.latest_step() is not None:
+        eng.restore(manager)
+    stats = RecoveryStats(restarts=0, checkpoints=0, replayed_rounds=0,
+                          rounds=0)
+    restarts = 0
+    while not eng.finished_streaming:
+        at_round = eng.round_index
+        try:
+            eng.run_round()
+            eng.save(manager)
+            manager.wait()
+            stats["checkpoints"] += 1
+            stats["rounds"] += 1
+        except recoverable:
+            restarts += 1
+            stats["restarts"] += 1
+            if on_event:
+                on_event("restart", at_round)
+            if restarts > max_restarts:
+                raise
+            delay = backoff_delay(restarts, base=backoff_base,
+                                  factor=backoff_factor, cap=backoff_cap)
+            if delay > 0:
+                sleep_fn(delay)
+            if manager.latest_step() is not None:
+                eng.restore(manager)
+            else:
+                eng.reset()   # round-0 fault: replay the source
+            stats["replayed_rounds"] += 1
+    labels, iterations, converged, visited = eng.finish()
+    result = make_result(labels, iterations, converged, visited,
+                         provenance=eng.provenance())
+    return result, stats
 
 
 class RecoveryStats(dict):

@@ -42,7 +42,9 @@ from repro.graphs.structs import Graph
 
 # Solver families that route sweeps through the kernel dispatch layer and
 # therefore carry a resolved ExecutionPlan (recorded in provenance).
-_PLANNED_SOLVERS = ("contour", "distributed")
+# "oocore" additionally gets the VMEM-derived streaming chunk bucket
+# stamped into the plan (solvers.resolve_backend_plan).
+_PLANNED_SOLVERS = ("contour", "distributed", "oocore")
 
 
 def resolve_warm_start(warm_start, n_vertices: int):
@@ -79,7 +81,11 @@ def solver_output(out):
 
     Solvers return ``(labels, iterations, converged)`` or the same plus a
     float32 ``edges_visited`` work counter (see ``registry``); both
-    ``solve`` and ``solve_batch`` funnel through here.
+    ``solve`` and ``solve_batch`` funnel through here.  A host-driven
+    solver may append a 5th element — a static tuple of provenance
+    strings (e.g. the out-of-core round decay) — which ``solve`` merges
+    into the result's provenance and batching ignores (it cannot cross a
+    ``vmap``).
     """
     labels, iterations, converged = out[:3]
     edges_visited = out[3] if len(out) > 3 else None
@@ -213,5 +219,7 @@ def solve(
             provenance.append(
                 retry_plan.replace(origin="fallback").provenance_entry())
     labels, iterations, converged, edges_visited = solver_output(out)
+    if len(out) > 4 and out[4]:
+        provenance.extend(out[4])
     return make_result(labels, iterations, converged, edges_visited,
                        provenance=provenance)

@@ -12,6 +12,9 @@ Five families, one signature (DESIGN.md §9 maps them onto the paper):
 * ``label_propagation`` — paper §I/§V traversal-family strawman.
 * ``union_find``        — paper §III-C ConnectIt stand-in (host-side
   Rem's algorithm with splicing).
+* ``oocore``            — out-of-core multi-round contraction
+  (DESIGN.md §15): edges stream from host memory chunk by chunk, so
+  problem size is decoupled from device memory.
 """
 from __future__ import annotations
 
@@ -21,10 +24,16 @@ from repro.connectivity import contour as _contour
 from repro.connectivity import distributed as _distributed
 from repro.connectivity import fastsv as _fastsv
 from repro.connectivity import lp as _lp
+from repro.connectivity import oocore as _oocore
 from repro.connectivity import planner as _planner
 from repro.connectivity import unionfind as _unionfind
 from repro.connectivity.planner import staged as _staged
 from repro.connectivity.registry import SolverSpec, register_solver
+from repro.graphs.generators import ArrayChunks
+
+# Registry names that resolve to the out-of-core solver (and therefore
+# need ExecutionPlan.chunk_bucket stamped at plan resolution).
+_OOCORE_NAMES = ("oocore", "out_of_core")
 
 
 def resolve_backend_plan(n_vertices: int, n_edges: int, opts):
@@ -36,11 +45,19 @@ def resolve_backend_plan(n_vertices: int, n_edges: int, opts):
     cache and falls back to the heuristic tables, while an explicit
     backend takes the tables with that backend substituted.  Always
     returns a concrete backend and an :class:`planner.ExecutionPlan`
-    (legacy ``KernelPlan`` pins are lifted).
+    (legacy ``KernelPlan`` pins are lifted).  For the out-of-core solver
+    the plan additionally carries the VMEM-derived streaming chunk
+    bucket (``chunk_bucket``), unless the pinned plan already set one.
     """
     plan = _planner.resolve_plan(n_vertices, n_edges, backend=opts.backend,
                                  plan=opts.plan)
     backend = plan.backend if opts.backend == "auto" else opts.backend
+    if (getattr(opts, "algorithm", None) in _OOCORE_NAMES
+            and plan.chunk_bucket == 0):
+        plan = plan.replace(chunk_bucket=_planner.oocore_chunk_bucket(
+            n_edges,
+            vmem_limit_bytes=opts.vmem_limit_bytes,
+            requested=opts.oocore_chunk_edges))
     return backend, plan
 
 
@@ -121,6 +138,22 @@ def _union_find_solver(graph, opts, init_labels):
                                  init_labels=init_labels)
 
 
+def _oocore_solver(graph, opts, init_labels):
+    if isinstance(graph.src, jax.core.Tracer):
+        raise ValueError(
+            "the 'oocore' solver is host-driven (it streams edge chunks "
+            "between rounds) and cannot run under an enclosing trace; "
+            "call solve() eagerly or use algorithm='contour'")
+    backend, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
+                                         opts)
+    bucket = plan.chunk_bucket or _planner.oocore_chunk_bucket(
+        graph.n_edges, vmem_limit_bytes=opts.vmem_limit_bytes,
+        requested=opts.oocore_chunk_edges)
+    src, dst, n = graph.to_numpy()
+    chunks = ArrayChunks(src, dst, n, bucket)
+    return _oocore.oocore_labels(chunks, opts, init_labels=init_labels)
+
+
 CONTOUR = register_solver(SolverSpec(
     name="contour",
     fn=_contour_solver,
@@ -168,4 +201,16 @@ UNION_FIND = register_solver(SolverSpec(
     supports_batch=False,        # host-side sequential loop
     runs_on="host",
     paper_ref="§III-C (ConnectIt stand-in: Rem's union-find)",
+))
+
+OOCORE = register_solver(SolverSpec(
+    name="oocore",
+    fn=_oocore_solver,
+    aliases=("out_of_core",),
+    variants=_contour.VARIANTS + ("C-<h>",),
+    default_variant="C-2",
+    default_max_iters=100_000,
+    supports_batch=False,        # host-driven round loop, not vmappable
+    paper_ref="§III-B streamed per Behnezhad et al. / ConnectIt "
+              "multi-round contraction (DESIGN.md §15)",
 ))

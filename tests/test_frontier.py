@@ -241,3 +241,54 @@ def test_distributed_adaptive_single_device_mesh():
     assert np.array_equal(np.asarray(L), np.asarray(dense_L))
     assert np.array_equal(np.asarray(L), oracle)
     assert float(visited) < float(dense_v) or int(rounds) < 3
+
+
+# ---------------------------------------------------------------------------
+# contract_edges degenerate boundaries (the O(m) cumsum partition)
+# ---------------------------------------------------------------------------
+
+
+def test_contract_edges_empty_frontier():
+    """active_m == 0: every edge is already retired — nothing relabels,
+    nothing moves, the count stays zero (the partition's base case)."""
+    L = jnp.arange(6, dtype=jnp.int32)
+    src = jnp.array([0, 2, 4], jnp.int32)
+    dst = jnp.array([1, 3, 5], jnp.int32)
+    s, d, am = fr.contract_edges(L, src, dst, jnp.int32(0))
+    assert int(am) == 0
+    assert np.array_equal(np.asarray(s), np.asarray(src))
+    assert np.array_equal(np.asarray(d), np.asarray(dst))
+
+
+def test_contract_edges_zero_length_arrays():
+    """m == 0: the cumsum ranks are empty slices, not an error."""
+    L = jnp.arange(4, dtype=jnp.int32)
+    e = jnp.zeros(0, jnp.int32)
+    s, d, am = fr.contract_edges(L, e, e, jnp.int32(0))
+    assert int(am) == 0 and s.shape == (0,) and d.shape == (0,)
+
+
+def test_contract_edges_all_active_all_retire():
+    """Every active edge is an intra-component self-loop after the
+    depth-2 relabel: n_keep hits 0 and the retirees keep stream order,
+    rewritten to their representatives."""
+    L = jnp.array([0, 0, 0, 3, 3], jnp.int32)
+    src = jnp.array([1, 2, 4], jnp.int32)
+    dst = jnp.array([2, 0, 3], jnp.int32)
+    s, d, am = fr.contract_edges(L, src, dst, jnp.int32(3))
+    assert int(am) == 0
+    assert np.array_equal(np.asarray(s), [0, 0, 3])
+    assert np.array_equal(np.asarray(d), [0, 0, 3])
+
+
+def test_contract_edges_single_survivor():
+    """Exactly one inter-component edge survives: it must land at slot 0
+    (the keep-rank) with both retirees stably behind it."""
+    L = jnp.array([0, 0, 2, 2], jnp.int32)
+    src = jnp.array([0, 1, 2], jnp.int32)
+    dst = jnp.array([1, 2, 3], jnp.int32)
+    s, d, am = fr.contract_edges(L, src, dst, jnp.int32(3))
+    assert int(am) == 1
+    assert (int(s[0]), int(d[0])) == (0, 2)
+    assert np.array_equal(np.asarray(s)[1:], [0, 2])
+    assert np.array_equal(np.asarray(d)[1:], [0, 2])

@@ -1,0 +1,343 @@
+"""Out-of-core multi-round contraction (DESIGN.md §15).
+
+The load-bearing properties:
+
+* **equivalence** — streaming any chunked edge source through
+  :class:`OutOfCoreContraction` lands labels bit-identical to the
+  one-shot in-core ``solve()`` (both are the canonical min-vertex-id
+  fixed point), warm starts included;
+* **decay** — the deduped surviving-edge count strictly decreases every
+  round (the termination argument, measured), and the adversarial
+  star-forest source genuinely needs more than one round;
+* **memory** — the device never holds more than the labels plus one
+  double-buffered chunk: the resident-set estimate on a stress graph
+  stays below the bytes the in-core path would materialise;
+* **recovery** — a crash mid-round restores the round-boundary
+  checkpoint (labels + survivor manifest) and replays one round, not the
+  stream; a round-0 crash replays the pure source, bit-exactly.
+
+Marked ``oocore`` (the CI oocore job runs ``-m oocore``); everything
+here also runs in the tier-1 default gate.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.connectivity import (
+    FaultInjector,
+    OutOfCoreContraction,
+    SolveOptions,
+    oocore_with_recovery,
+    solve,
+    solve_chunks,
+)
+from repro.connectivity import planner as _planner
+from repro.connectivity.oocore import EDGE_BYTES, estimate_peak_bytes
+from repro.graphs import generators as gen
+from repro.graphs.generators import (
+    ArrayChunks,
+    RmatChunks,
+    rmat_chunks,
+    star_forest_chunks,
+)
+from repro.graphs.oracle import connected_components_oracle
+from repro.graphs.structs import Graph
+
+pytestmark = pytest.mark.oocore
+
+_XLA = dict(variant="C-2", backend="xla")
+
+
+def _chunks_of(graph, chunk_edges):
+    src, dst, n = graph.to_numpy()
+    return ArrayChunks(src, dst, n, chunk_edges)
+
+
+def _suite():
+    return {
+        "path": gen.path(3000, seed=1),
+        "rmat": gen.rmat(11, seed=2),
+        "mix": gen.components_mix(
+            [gen.path(500, seed=3), gen.star(400, seed=4),
+             gen.rmat(9, seed=5)], seed=6),
+    }
+
+
+# ---------------------------------------------------------------------------
+# equivalence: chunked out-of-core vs one-shot in-core
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["path", "rmat", "mix"])
+@pytest.mark.parametrize("chunk_edges", [1024, 4096])
+def test_bit_identical_to_incore(name, chunk_edges):
+    g = _suite()[name]
+    oracle = connected_components_oracle(*g.to_numpy())
+    one = solve(g, SolveOptions(**_XLA))
+    res = solve_chunks(_chunks_of(g, chunk_edges),
+                       SolveOptions(algorithm="oocore", **_XLA))
+    assert np.array_equal(np.asarray(res.labels), np.asarray(one.labels))
+    assert np.array_equal(np.asarray(res.labels), oracle)
+    assert bool(res.converged)
+    assert float(res.edges_visited) > 0
+
+
+def test_generator_fed_chunks_bit_identical():
+    chunks = rmat_chunks(scale=12, edge_factor=8, seed=3, chunk_edges=2048)
+    res = solve_chunks(chunks, SolveOptions(algorithm="oocore", **_XLA))
+    one = solve(chunks.materialize(), SolveOptions(**_XLA))
+    assert np.array_equal(np.asarray(res.labels), np.asarray(one.labels))
+
+
+def test_facade_algorithm_oocore():
+    g = _suite()["mix"]
+    res = solve(g, algorithm="oocore", oocore_chunk_edges=1024, **_XLA)
+    one = solve(g, SolveOptions(**_XLA))
+    assert np.array_equal(np.asarray(res.labels), np.asarray(one.labels))
+    # plan provenance records the streamed bucket + the round decay
+    assert any("chunk=1024" in e for e in res.provenance)
+    assert any(e.startswith("oocore:rounds=") for e in res.provenance)
+
+
+def test_warm_start_resumes():
+    g = _suite()["rmat"]
+    first = solve_chunks(_chunks_of(g, 2048),
+                         SolveOptions(algorithm="oocore", **_XLA))
+    warm = solve_chunks(_chunks_of(g, 2048),
+                        SolveOptions(algorithm="oocore", **_XLA),
+                        warm_start=first)
+    assert np.array_equal(np.asarray(warm.labels), np.asarray(first.labels))
+    # restarting from the fixed point: every edge retires in round 0
+    eng = OutOfCoreContraction(_chunks_of(g, 2048),
+                               SolveOptions(algorithm="oocore", **_XLA),
+                               init_labels=first.labels)
+    eng.run()
+    assert eng.round_counts[-1] == 0
+
+
+def test_tracer_guard():
+    g = gen.path(64, seed=0)
+
+    @jax.jit
+    def bad(src, dst):
+        return solve(Graph(src, dst, g.n_vertices), algorithm="oocore")
+
+    with pytest.raises(ValueError, match="host-driven"):
+        bad(g.src, g.dst)
+
+
+# ---------------------------------------------------------------------------
+# round structure: strict decay, the adversarial multi-round source
+# ---------------------------------------------------------------------------
+
+
+def test_decay_strictly_decreasing():
+    g = _suite()["mix"]
+    eng = OutOfCoreContraction(_chunks_of(g, 1024),
+                               SolveOptions(algorithm="oocore", **_XLA))
+    rounds = []
+    while not eng.finished_streaming:
+        rounds.append(eng.run_round())
+    chain = [g.n_edges] + [r["survivors"] for r in rounds]
+    assert all(b < a for a, b in zip(chain, chain[1:]))
+    for r, prev in zip(rounds, chain):
+        assert r["edges_in"] == prev
+
+
+def test_star_forest_needs_two_rounds():
+    chunks = star_forest_chunks(k=8, b=1024)
+    eng = OutOfCoreContraction(chunks,
+                               SolveOptions(algorithm="oocore", **_XLA,
+                                            oocore_local_iters=1))
+    labels, _, converged, _ = eng.run()
+    # round 0's single sweep per chunk leaves far more survivors than
+    # the bucket -> a genuine second round ran
+    assert len(eng.round_counts) >= 2
+    assert eng.round_counts[0] > chunks.chunk_edges
+    assert eng.round_counts[-1] <= chunks.chunk_edges
+    assert not eng.round_cap_exhausted
+    one = solve(chunks.materialize(), SolveOptions(**_XLA))
+    assert bool(converged)
+    assert np.array_equal(np.asarray(labels), np.asarray(one.labels))
+
+
+def test_round_cap_forces_finish_with_waiver():
+    chunks = star_forest_chunks(k=8, b=1024)
+    res = solve_chunks(chunks,
+                       SolveOptions(algorithm="oocore", **_XLA,
+                                    oocore_local_iters=1,
+                                    oocore_round_cap=1))
+    assert "oocore_round_cap_exhausted" in res.provenance
+    one = solve(chunks.materialize(), SolveOptions(**_XLA))
+    assert np.array_equal(np.asarray(res.labels), np.asarray(one.labels))
+
+
+def test_peak_estimate_below_edge_bytes_on_stress_graph():
+    chunks = rmat_chunks(scale=13, edge_factor=8, seed=9, chunk_edges=2048)
+    assert chunks.n_edges >= 4 * chunks.chunk_edges
+    eng = OutOfCoreContraction(chunks,
+                               SolveOptions(algorithm="oocore", **_XLA))
+    eng.run()
+    assert not eng.round_cap_exhausted
+    assert eng.peak_bytes_estimate() < EDGE_BYTES * chunks.n_edges
+    assert eng.peak_bytes_estimate() == estimate_peak_bytes(
+        chunks.n_vertices, chunks.chunk_edges)
+
+
+# ---------------------------------------------------------------------------
+# the chunked generator
+# ---------------------------------------------------------------------------
+
+
+def test_rmat_chunks_pure_and_deterministic():
+    a = RmatChunks(scale=10, edge_factor=8, seed=4, chunk_edges=1024)
+    b = RmatChunks(scale=10, edge_factor=8, seed=4, chunk_edges=1024)
+    for k in (0, a.n_chunks - 1):
+        s1, d1 = a.chunk(k)
+        s2, d2 = a.chunk(k)          # same instance, re-asked
+        s3, d3 = b.chunk(k)          # fresh instance, same seed
+        assert np.array_equal(s1, s2) and np.array_equal(d1, d2)
+        assert np.array_equal(s1, s3) and np.array_equal(d1, d3)
+        assert s1.min() >= 0 and max(s1.max(), d1.max()) < a.n_vertices
+    assert np.array_equal(a.chunk(0)[0], b.chunk(0)[0])
+    assert not np.array_equal(a.chunk(0)[0], a.chunk(1)[0])
+    diff = RmatChunks(scale=10, edge_factor=8, seed=5, chunk_edges=1024)
+    assert not np.array_equal(a.chunk(0)[0], diff.chunk(0)[0])
+
+
+def test_chunk_sizes_cover_the_edge_count():
+    c = ArrayChunks(np.zeros(5000, np.int64), np.ones(5000, np.int64),
+                    8, 1024)
+    assert c.n_chunks == 5
+    assert sum(c.chunk_size(k) for k in range(c.n_chunks)) == 5000
+    assert c.chunk_size(c.n_chunks - 1) == 5000 - 4 * 1024
+    g = rmat_chunks(scale=9, edge_factor=8, seed=0,
+                    chunk_edges=1024).materialize()
+    assert g.n_edges == (1 << 9) * 8
+
+
+def test_chunk_edges_must_be_pow2():
+    with pytest.raises(ValueError, match="power of two"):
+        ArrayChunks(np.zeros(10, np.int64), np.zeros(10, np.int64), 4, 100)
+    with pytest.raises(ValueError, match="power of two"):
+        RmatChunks(scale=8, chunk_edges=3)
+
+
+# ---------------------------------------------------------------------------
+# options / plan validation
+# ---------------------------------------------------------------------------
+
+
+def test_options_reject_nonsense_eagerly():
+    from repro.connectivity.planner.staged import MIN_STAGE_EDGES
+    with pytest.raises(ValueError, match="oocore_chunk_edges"):
+        SolveOptions(oocore_chunk_edges=MIN_STAGE_EDGES // 2).validate()
+    with pytest.raises(ValueError, match="oocore_round_cap"):
+        SolveOptions(oocore_round_cap=0).validate()
+    with pytest.raises(ValueError, match="oocore_local_iters"):
+        SolveOptions(oocore_local_iters=0).validate()
+    # the same rejections fire through the facade, before any solve work
+    g = gen.path(32, seed=0)
+    with pytest.raises(ValueError, match="oocore_round_cap"):
+        solve(g, algorithm="oocore", oocore_round_cap=-1)
+    SolveOptions(oocore_chunk_edges=MIN_STAGE_EDGES,
+                 oocore_round_cap=1, oocore_local_iters=1).validate()
+
+
+def test_plan_chunk_bucket_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="chunk_bucket"):
+        _planner.ExecutionPlan(backend="xla", chunk_bucket=3).validate()
+    plan = _planner.ExecutionPlan(backend="xla", chunk_bucket=4096)
+    plan.validate()
+    assert "chunk=4096" in plan.provenance_entry()
+    # config round-trip keeps the bucket; legacy configs default to 0
+    assert _planner.ExecutionPlan.from_config(
+        plan.to_config()).chunk_bucket == 4096
+    legacy = {k: v for k, v in plan.to_config().items()
+              if k != "chunk_bucket"}
+    assert _planner.ExecutionPlan.from_config(legacy).chunk_bucket == 0
+
+
+def test_planner_bucket_resolution():
+    from repro.connectivity.planner.staged import MIN_STAGE_EDGES
+    # an explicit request wins, rounded up to pow2
+    assert _planner.oocore_chunk_bucket(1 << 20, requested=3000) == 4096
+    # unrequested: VMEM-budget-derived, pow2, within the clamp window
+    b = _planner.oocore_chunk_bucket(1 << 20)
+    assert b & (b - 1) == 0
+    assert MIN_STAGE_EDGES <= b <= (1 << 20)
+    # tiny graphs never stream below the stage floor
+    assert _planner.oocore_chunk_bucket(64) == MIN_STAGE_EDGES
+
+
+# ---------------------------------------------------------------------------
+# recovery: round-boundary checkpoints (chaos tier rides the oocore marker)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_midround_crash_replays_one_round(tmp_path):
+    chunks = star_forest_chunks(k=8, b=1024)
+    opts = SolveOptions(algorithm="oocore", **_XLA, oocore_local_iters=1)
+    clean = solve_chunks(chunks, opts)
+    # chunk counter 9 = second chunk of round 1: past the round-0
+    # checkpoint, mid-stream in round 1
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    res, stats = oocore_with_recovery(
+        chunks, mgr, opts,
+        fault_injector=FaultInjector(fail_at=((9, "oocore_chunk"),)))
+    assert np.array_equal(np.asarray(res.labels), np.asarray(clean.labels))
+    assert stats.restarts == 1
+    assert stats.replayed_rounds >= 1
+    assert any(e.startswith("oocore:rounds=") for e in res.provenance)
+
+
+@pytest.mark.chaos
+def test_round0_crash_replays_the_source(tmp_path):
+    g = _suite()["mix"]
+    opts = SolveOptions(algorithm="oocore", **_XLA)
+    clean = solve_chunks(_chunks_of(g, 1024), opts)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    res, stats = oocore_with_recovery(
+        _chunks_of(g, 1024), mgr, opts,
+        fault_injector=FaultInjector(fail_at=((3, "oocore_chunk"),)))
+    assert np.array_equal(np.asarray(res.labels), np.asarray(clean.labels))
+    assert stats.restarts == 1
+
+
+@pytest.mark.chaos
+def test_fresh_engine_resumes_from_manifest(tmp_path):
+    """Cross-process resume: a new engine restores the round-boundary
+    state (labels + survivor manifest) and finishes bit-exactly."""
+    chunks = star_forest_chunks(k=8, b=1024)
+    opts = SolveOptions(algorithm="oocore", **_XLA, oocore_local_iters=1)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    eng = OutOfCoreContraction(chunks, opts)
+    eng.run_round()
+    eng.save(mgr)
+    mgr.wait()
+    clean = solve_chunks(chunks, opts)
+
+    eng2 = OutOfCoreContraction(chunks, opts)
+    eng2.restore(mgr)
+    assert eng2.round_index == 1
+    assert eng2.round_counts == eng.round_counts
+    while not eng2.finished_streaming:
+        eng2.run_round()
+    labels, _, converged, _ = eng2.finish()
+    assert bool(converged)
+    assert np.array_equal(np.asarray(labels), np.asarray(clean.labels))
+
+
+def test_unrecoverable_fault_propagates(tmp_path):
+    chunks = star_forest_chunks(k=4, b=1024)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    with pytest.raises(Exception):
+        oocore_with_recovery(
+            chunks, mgr,
+            SolveOptions(algorithm="oocore", **_XLA, oocore_local_iters=1),
+            max_restarts=0,
+            fault_injector=FaultInjector(fail_at=((2, "oocore_chunk"),)))
