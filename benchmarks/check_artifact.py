@@ -50,7 +50,15 @@ Fails (exit 1) when:
   - some stress row with ``n_edges >= 4 * chunk_bucket`` must keep
     ``peak_bytes`` under ``8 * n_edges`` (the int32 edge-pair bytes the
     in-core path would materialise), and some row must take >= 2 rounds
-    (the multi-round path is actually exercised).
+    (the multi-round path is actually exercised);
+
+* the strategy gate regressed (schema 7, DESIGN.md §16) — both verdicts
+  re-derived from the raw per-side rows:
+
+  - every sampling strategy *and* ``solver="auto"`` must land
+    bit-identical to the dense oracle on every matrix graph;
+  - auto's best-of-k wall clock must stay within 1.1x the best single
+    fixed strategy at geomean across the matrix.
 
 For serving artifacts, fails when:
 
@@ -120,6 +128,56 @@ def check(payload: dict) -> list:
         errors.extend(check_wallclock_gates(payload))
     if int(payload.get("schema", 0)) >= 6:
         errors.extend(check_oocore_gate(payload))
+    if int(payload.get("schema", 0)) >= 7:
+        errors.extend(check_strategy_gate(payload))
+    return errors
+
+
+# auto's allowed geomean overhead over the best single fixed strategy —
+# mirrors benchmarks.connectivity.STRATEGY_AUTO_TOLERANCE (duplicated:
+# this checker must stay stdlib-only / importable bare)
+STRATEGY_AUTO_TOLERANCE = 1.1
+
+
+def check_strategy_gate(payload: dict) -> list:
+    """Re-derive the schema-7 strategy-matrix verdicts from raw rows.
+
+    Both halves are recomputed from per-side data — bit-identity flags
+    per (graph, strategy), and the auto-vs-best-fixed geomean from the
+    raw per-round seconds — so a hand-edited summary cannot pass a
+    failing artifact.
+    """
+    errors = []
+    gate = payload.get("strategy_gate", {})
+    if not gate:
+        return ["schema >= 7 artifact is missing the strategy gate"]
+    logs = []
+    for name, row in gate.items():
+        sides = row.get("sides", {})
+        if not sides:
+            errors.append(f"strategy row {name!r} recorded no sides")
+            continue
+        for side, d in sides.items():
+            if d.get("bit_identical") is not True:
+                errors.append(
+                    f"strategy row {name!r} side {side!r} labels differ "
+                    f"from the dense oracle")
+        fixed = [min(d["seconds"]) for s, d in sides.items()
+                 if s != "auto" and d.get("seconds")]
+        auto = sides.get("auto", {}).get("seconds")
+        if not fixed or not auto:
+            errors.append(
+                f"strategy row {name!r} has no raw timings to re-derive "
+                f"the auto-vs-best-fixed ratio from")
+            continue
+        logs.append(math.log(min(auto) / min(fixed)))
+    if logs:
+        geomean = math.exp(sum(logs) / len(logs))
+        if geomean > STRATEGY_AUTO_TOLERANCE:
+            errors.append(
+                f"strategy gate regressed: solver='auto' geomean wall "
+                f"clock {geomean:.4f}x the best fixed strategy "
+                f"(> {STRATEGY_AUTO_TOLERANCE}x)")
     return errors
 
 
@@ -343,7 +401,9 @@ def check_path(path: str) -> int:
               f"oocore_bit_identical="
               f"{summary.get('oocore_bit_identical')}, "
               f"oocore_peak_below_edge_bytes="
-              f"{summary.get('oocore_peak_below_edge_bytes')})")
+              f"{summary.get('oocore_peak_below_edge_bytes')}, "
+              f"auto_vs_best_fixed_geomean="
+              f"{summary.get('auto_vs_best_fixed_geomean')})")
     return 0
 
 

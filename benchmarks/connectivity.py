@@ -352,6 +352,121 @@ def frontier_wallclock_gate(fast: bool = False,
     return out
 
 
+# The strategy matrix sweeps one graph per family regime: long diameter
+# (path), regular mesh (grid), power-law (rmat), disconnected mix, and
+# hub-dominated (star) — star_64k deliberately included even in --fast
+# runs since skew is the cost model's separating feature.
+STRATEGY_GATE_GRAPHS = ("path_64k", "grid_256x256", "rmat_16",
+                        "mix_3comp", "star_64k")
+
+# --strategy restriction (None = all registered strategies + auto); set
+# through set_strategy_sides so caches are invalidated with it
+_STRATEGY_SIDES: Optional[tuple] = None
+
+
+def set_strategy_sides(sides) -> None:
+    """Restrict the strategy-matrix gate to the named sides.
+
+    ``benchmarks.run --strategy`` calls this after validating the names
+    against the frontier strategy registry (+ ``"auto"``); gate caches
+    are dropped because cached rows covered a different side set.
+    """
+    global _STRATEGY_SIDES
+    _STRATEGY_SIDES = tuple(sides) if sides else None
+    _GATE_CACHE.clear()
+
+
+def strategy_matrix_gate(fast: bool = False,
+                         repeats: int = 5) -> Dict[str, Dict[str, object]]:
+    """ConnectIt-style strategy matrix: every sampling strategy x graph
+    family, plus ``solver="auto"`` (schema 7, DESIGN.md §16).
+
+    Each fixed side is the work-adaptive C-2 solve pinned to one
+    registered sampling strategy; the ``auto`` side is the full
+    ``solver="auto"`` dispatch (cost model + delegation), timed
+    end-to-end so its measured seconds *include* the feature extraction
+    and model lookup a real caller pays.  All sides are timed
+    interleaved (best-of-k, jit caches warm, same pattern as
+    :func:`frontier_wallclock_gate`) and every side's labels must be
+    bit-identical to the dense oracle.  Raw per-round seconds are
+    recorded per side so ``check_artifact.py`` re-derives both verdicts
+    (bit-identity, auto <= 1.1x the best fixed strategy at geomean)
+    from the rows instead of trusting summary booleans.
+    """
+    from repro.connectivity import frontier as _frontier
+    from repro.graphs import stats as _stats
+
+    cache_key = f"strategy_gate:fast={fast}"
+    if cache_key in _GATE_CACHE:
+        return _GATE_CACHE[cache_key]
+    del fast  # one graph per regime is already the fast set
+    suite = gen.paper_suite(small=True)
+    out: Dict[str, Dict[str, object]] = {}
+    for name in STRATEGY_GATE_GRAPHS:
+        g = suite[name]
+        src_np, dst_np, n = g.to_numpy()
+        oracle = connected_components_oracle(src_np, dst_np, n)
+        skew = _stats.degree_skew(src_np, dst_np, n)
+        sides = [(s, SolveOptions(algorithm="contour", variant="C-2",
+                                  backend="xla", sampling=2,
+                                  compact_every=2, sampling_strategy=s))
+                 for s in _frontier.SAMPLING_STRATEGIES]
+        sides.append(("auto", SolveOptions(algorithm="auto",
+                                           backend="xla")))
+        if _STRATEGY_SIDES is not None:
+            sides = [sd for sd in sides if sd[0] in _STRATEGY_SIDES]
+        fns = [(side, lambda o=o: solve(g, o)) for side, o in sides]
+        row_sides: Dict[str, Dict[str, object]] = {}
+        for side, fn in fns:               # warmup / compile + labels
+            result = fn()
+            _block(result)
+            row_sides[side] = {
+                "bit_identical": bool(np.array_equal(
+                    np.asarray(result.labels), oracle)),
+                "iterations": int(result.iterations),
+                "seconds": [],
+            }
+            if side == "auto":
+                row_sides[side]["provenance"] = list(result.provenance
+                                                     or ())
+        for r in range(repeats):
+            for side, fn in (fns if r % 2 == 0 else fns[::-1]):
+                t0 = time.perf_counter()
+                _block(fn())
+                row_sides[side]["seconds"].append(
+                    time.perf_counter() - t0)
+        out[name] = {"n": int(n), "m": int(len(src_np)),
+                     "degree_skew": float(skew), "sides": row_sides}
+    _GATE_CACHE[cache_key] = out
+    return out
+
+
+def strategy_summary(gate: Dict[str, Dict[str, object]]) -> Dict[str, object]:
+    """Re-derive the two strategy-gate verdicts from the raw rows."""
+    bit_ok = True
+    ratios = []
+    for row in gate.values():
+        sides = row["sides"]
+        for d in sides.values():
+            bit_ok = bit_ok and bool(d.get("bit_identical"))
+        fixed = [min(d["seconds"]) for s, d in sides.items()
+                 if s != "auto" and d.get("seconds")]
+        auto = sides.get("auto", {}).get("seconds")
+        if fixed and auto:
+            ratios.append(min(auto) / min(fixed))
+    geo = float(np.exp(np.mean(np.log(ratios)))) if ratios else 1.0
+    return {
+        "strategy_all_bit_identical": bool(bit_ok),
+        "auto_vs_best_fixed_geomean": geo,
+        "auto_within_tolerance": bool(geo <= STRATEGY_AUTO_TOLERANCE),
+    }
+
+
+# auto may pay feature extraction + dispatch on top of the winning
+# strategy's own solve; the gate allows 10% at geomean across the matrix
+STRATEGY_AUTO_TOLERANCE = 1.1
+
+
 def autotune_gate(fast: bool = False, repeats: int = 5,
                   retune: bool = False,
                   cache_path: Optional[str] = None
@@ -500,6 +615,7 @@ def records_to_json(records: List[Record], fast: bool = False,
                     autotune: Optional[Dict] = None,
                     tuning_cache: Optional[Dict] = None,
                     oocore: Optional[Dict] = None,
+                    strategy: Optional[Dict] = None,
                     ) -> Dict:
     """Machine-readable benchmark artifact (``BENCH_connectivity.json``).
 
@@ -535,7 +651,14 @@ def records_to_json(records: List[Record], fast: bool = False,
       and — on a stress graph at least 4x the chunk budget — keep peak
       device bytes below the total edge bytes the in-core path would
       materialise.  All three verdicts are re-derived from the raw
-      per-row numbers by ``check_artifact.py``.
+      per-row numbers by ``check_artifact.py``;
+    * the **strategy gate** (:func:`strategy_matrix_gate` — schema 7
+      addition): every sampling strategy and ``solver="auto"`` must land
+      bit-identical to the dense oracle on every matrix graph, and
+      auto's best-of-k wall clock must stay within
+      ``STRATEGY_AUTO_TOLERANCE`` (1.1x) of the best single fixed
+      strategy at geomean — both re-derived from the raw per-side
+      seconds by ``check_artifact.py``.
     """
     times = pivot(records, "time_s")
     if gate:
@@ -577,6 +700,8 @@ def records_to_json(records: List[Record], fast: bool = False,
     if oocore:
         from benchmarks.oocore import summarise as _oocore_summary
         summary.update(_oocore_summary(oocore))
+    if strategy:
+        summary.update(strategy_summary(strategy))
     schema = 2
     if streaming:
         schema = 3
@@ -584,6 +709,8 @@ def records_to_json(records: List[Record], fast: bool = False,
         schema = 5
     if oocore:
         schema = 6
+    if strategy:
+        schema = 7
     return {
         "schema": schema,
         "suite": "paper_connectivity",
@@ -595,6 +722,7 @@ def records_to_json(records: List[Record], fast: bool = False,
         "frontier_wallclock_gate": frontier_wallclock or {},
         "autotune_gate": autotune or {},
         "oocore_gate": oocore or {},
+        "strategy_gate": strategy or {},
         "tuning_cache": tuning_cache or {},
         "records": [dataclasses.asdict(r) for r in records],
     }

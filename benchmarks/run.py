@@ -74,11 +74,28 @@ def main() -> None:
     ap.add_argument("--retune", action="store_true",
                     help="clear the plan tuning cache and re-run the "
                          "measuring autotuner from scratch")
+    ap.add_argument("--strategy", default=None,
+                    help="comma-separated sampling strategies (or 'auto') "
+                         "to restrict the strategy-matrix gate to; "
+                         "default: all registered strategies + auto")
     args = ap.parse_args()
 
     # Fail fast on an impossible backend request *before* any section
     # runs — a raw Pallas lowering error mid-suite helps nobody.
     connectivity.validate_backend(args.backend)
+    if args.strategy is not None:
+        from repro.connectivity.frontier import SAMPLING_STRATEGIES
+        known = tuple(SAMPLING_STRATEGIES) + ("auto",)
+        requested = tuple(s for s in args.strategy.split(",") if s)
+        for s in requested:
+            if s not in known:
+                raise SystemExit(
+                    f"unknown strategy {s!r}: choose from {known}\n"
+                    "hint: strategies are registered in "
+                    "repro.connectivity.frontier "
+                    "(register_sampling_strategy); 'auto' is the cost-"
+                    "model dispatch, not a sampling strategy name")
+        connectivity.set_strategy_sides(requested)
     if args.backend != "auto":
         connectivity.set_backend(args.backend)
 
@@ -112,12 +129,13 @@ def main() -> None:
             tune_gate = connectivity.autotune_gate(fast=args.fast,
                                                    retune=args.retune)
             oo_gate = oocore.run_gate(fast=args.fast)
+            strat_gate = connectivity.strategy_matrix_gate(fast=args.fast)
             from repro.connectivity import planner as _planner
             payload = connectivity.records_to_json(
                 records, fast=args.fast, gate=gate, streaming=stream_gate,
                 frontier_wallclock=fw_gate, autotune=tune_gate,
                 tuning_cache=_planner.cache.entries(),
-                oocore=oo_gate)
+                oocore=oo_gate, strategy=strat_gate)
             recovery.merge_into_artifact(payload,
                                          recovery.run_gate(fast=args.fast))
             with open(args.json, "w") as f:

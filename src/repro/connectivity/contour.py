@@ -163,7 +163,8 @@ def _make_step(variant: str, warmup: int, async_compress: int,
     jax.jit,
     static_argnames=("n_vertices", "variant", "max_iters", "warmup",
                      "async_compress", "backend", "plan", "sampling",
-                     "compact_every", "vmem_limit_bytes"),
+                     "compact_every", "sampling_strategy", "sampling_k",
+                     "vmem_limit_bytes"),
 )
 def contour_labels(
     src: jax.Array,
@@ -179,6 +180,8 @@ def contour_labels(
     plan=None,
     sampling: int = 0,
     compact_every: int = 0,
+    sampling_strategy: str = "prefix",
+    sampling_k: int = fr.DEFAULT_SAMPLING_K,
     vmem_limit_bytes: Optional[int] = None,
 ):
     """Run Contour; returns (labels[n], n_iterations, converged, visited).
@@ -191,7 +194,12 @@ def contour_labels(
     cumulative edges-swept counter: ``n_iterations * m`` for the dense
     schedule, the sum of per-sweep frontier sizes when ``sampling`` /
     ``compact_every`` enable the work-adaptive contraction schedule
-    (``repro.connectivity.frontier``).
+    (``repro.connectivity.frontier``).  ``sampling_strategy`` picks the
+    sampling phase's :class:`~repro.connectivity.frontier
+    .SamplingStrategy` (``"prefix"`` / ``"kout"`` / ``"bfs"``;
+    ``sampling_k`` is the k-out fan-in) — every strategy reduces to a
+    permutation of the edge list plus a prefix width, so the fixed point
+    is strategy-independent.
     """
     if warmup < 0 or async_compress < 0:
         raise ValueError("warmup and async_compress must be >= 0, got "
@@ -211,9 +219,14 @@ def contour_labels(
     L0 = lab.resolve_init_labels(init_labels, n_vertices, src.dtype)
 
     if adaptive:
+        sample_m = None
+        if sampling > 0 and sampling_strategy != "prefix":
+            src, dst, sample_m = fr.prepare_sampling(
+                sampling_strategy, src, dst, n_vertices, sampling_k)
         L, it, done, _, visited = fr.adaptive_fixpoint(
             src, dst, L0, step, n_vertices=n_vertices, sampling=sampling,
-            compact_every=compact_every, max_iters=max_iters)
+            compact_every=compact_every, max_iters=max_iters,
+            sample_m0=sample_m)
         return L, it, done, visited
 
     def cond(s: ContourState):

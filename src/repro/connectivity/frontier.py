@@ -8,10 +8,21 @@ module makes that observation structural, adapting ConnectIt's sampling
 phase and Afforest's skip-the-largest-component trick (PAPERS.md) to a
 jit-compiled functional runtime:
 
-1. **Sampling prefix phase** — the first ``sampling`` iterations sweep only
-   a deterministic *prefix* of the edge list (``m // SAMPLE_PREFIX_DENOM``
-   edges).  On power-law / suite graphs a few cheap prefix sweeps are
-   enough for one giant intermediate component to emerge.
+1. **Sampling phase** — the first ``sampling`` iterations sweep only a
+   *sample* of the edge list.  Which sample is a pluggable
+   :class:`SamplingStrategy` (ConnectIt's central axis): the default
+   ``"prefix"`` strategy sweeps a deterministic prefix
+   (``m // SAMPLE_PREFIX_DENOM`` edges); ``"kout"`` is the
+   Afforest/k-out neighbour-subgraph sampler (each vertex's first ``k``
+   incident edges); ``"bfs"`` grows low-diameter balls around
+   high-degree seed vertices.  Every strategy reduces to *a permutation
+   of the edge list plus a prefix width* (``prepare_sampling``), which
+   is what makes the whole matrix sound: scatter-min sweeps are
+   order-free and sweeping any edge subset is a valid min-mapping
+   relaxation, so a sampled sweep is just a cheaper sound sweep and the
+   fixed point is untouched.  On power-law / suite graphs a few cheap
+   sampled sweeps are enough for one giant intermediate component to
+   emerge.
 
 2. **Skip-the-largest-component filter** — after the sampling phase, the
    most frequent current label (the largest intermediate component) is
@@ -52,7 +63,8 @@ per-sweep active counts.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Tuple
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,15 +72,172 @@ import jax.numpy as jnp
 from repro.connectivity import minmap as lab
 
 # The deterministic sampling prefix is m // SAMPLE_PREFIX_DENOM edges
-# (at least 1).  ConnectIt samples neighbours per vertex; an edge-list
+# (at least 1 — a zero-width prefix on a graph with m < DENOM edges
+# would turn every sampling iteration into a no-op that burns the
+# budget).  ConnectIt samples neighbours per vertex; an edge-list
 # prefix is the order-free analogue and keeps the phase a pure static
 # slice of the same arrays.
 SAMPLE_PREFIX_DENOM = 4
+
+# k-out/Afforest sampling: how many incident edges each vertex
+# contributes to the sample by default (SolveOptions.sampling_k).
+DEFAULT_SAMPLING_K = 2
+
+# BFS/low-diameter-decomposition sampling: balls of this radius are
+# grown around this many top-degree seed vertices; the sample is every
+# edge with an endpoint inside a ball.
+BFS_SAMPLE_SEEDS = 16
+BFS_SAMPLE_ROUNDS = 4
 
 
 def sample_prefix_m(n_edges: int) -> int:
     """Static size of the deterministic edge-prefix sample."""
     return max(1, n_edges // SAMPLE_PREFIX_DENOM)
+
+
+def stable_partition(src: jax.Array, dst: jax.Array, keep: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stable two-way partition of an edge list into ``[keep | rest]``.
+
+    O(m) via two prefix sums (the ``contract_edges`` trick): keepers land
+    at their keep-rank, the rest after the last keeper at their
+    rest-rank; both ranks are monotone in position, so relative order
+    within each class is preserved.  Returns ``(src', dst', n_keep)``
+    with ``n_keep`` an int32 scalar (traced-safe).
+    """
+    n_keep = jnp.sum(keep).astype(jnp.int32)
+    kidx = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    ridx = n_keep + jnp.cumsum((~keep).astype(jnp.int32)) - 1
+    dest = jnp.where(keep, kidx, ridx).astype(jnp.int32)
+    out_s = jnp.zeros_like(src).at[dest].set(src)
+    out_d = jnp.zeros_like(dst).at[dest].set(dst)
+    return out_s, out_d, n_keep
+
+
+def _occurrence_rank(x: jax.Array) -> jax.Array:
+    """``rank[i]`` = how many earlier positions hold the same value as
+    ``x[i]`` — i.e. the edge-list-order index of this occurrence among
+    its value's occurrences.  Vectorised: stable argsort groups equal
+    values (ties keep list order), a cummax over group starts recovers
+    each group's base offset."""
+    m = x.shape[0]
+    if m == 0:
+        return jnp.zeros((0,), jnp.int32)
+    order = jnp.argsort(x)                       # stable in jax.numpy
+    xs = x[order]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.ones((1,), bool), xs[1:] != xs[:-1]])
+    group_start = jax.lax.cummax(jnp.where(starts, idx, 0))
+    rank_sorted = idx - group_start
+    return jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+
+
+def _prepare_prefix(src, dst, n_vertices, k):
+    """The deterministic edge prefix: identity permutation."""
+    del n_vertices, k
+    return src, dst, jnp.int32(sample_prefix_m(src.shape[0]))
+
+
+def _prepare_kout(src, dst, n_vertices, k):
+    """Afforest/k-out neighbour subgraph: each vertex's first ``k``
+    incident edges (in edge-list order, either endpoint) are sampled.
+
+    Sampled edges are stably partitioned to the front; the sample is the
+    resulting prefix.  Low-degree vertices contribute everything they
+    have, so on bounded-degree graphs (paths, grids with degree <= k)
+    the sample is the whole edge list — exactly Afforest's behaviour.
+    """
+    del n_vertices
+    m = src.shape[0]
+    if m == 0:
+        return src, dst, jnp.int32(0)
+    sampled = (_occurrence_rank(src) < k) | (_occurrence_rank(dst) < k)
+    out_s, out_d, sample_m = stable_partition(src, dst, sampled)
+    # >= 1 whenever edges exist: rank 0 of any endpoint is always sampled
+    return out_s, out_d, jnp.maximum(sample_m, jnp.int32(min(1, m)))
+
+
+def _prepare_bfs(src, dst, n_vertices, k):
+    """BFS/low-diameter-decomposition sample: grow balls of radius
+    ``BFS_SAMPLE_ROUNDS`` around the ``BFS_SAMPLE_SEEDS`` highest-degree
+    vertices; sample every edge with an endpoint in a ball.
+
+    High-degree seeds are where the giant component condenses first, so
+    the sampled subgraph gives the post-sampling largest-component
+    filter the best target per swept edge.
+    """
+    del k
+    m = src.shape[0]
+    if m == 0:
+        return src, dst, jnp.int32(0)
+    deg = (jnp.zeros((n_vertices,), jnp.int32).at[src].add(1)
+           .at[dst].add(1))
+    _, seeds = jax.lax.top_k(deg, min(BFS_SAMPLE_SEEDS, n_vertices))
+    reached = jnp.zeros((n_vertices,), jnp.int32).at[seeds].set(1)
+
+    def grow(_, r):
+        hit = jnp.maximum(r[src], r[dst])
+        return r.at[src].max(hit).at[dst].max(hit)
+
+    reached = jax.lax.fori_loop(0, BFS_SAMPLE_ROUNDS, grow, reached)
+    sampled = (reached[src] | reached[dst]) > 0
+    out_s, out_d, sample_m = stable_partition(src, dst, sampled)
+    # the top-degree seed has an incident edge whenever m > 0
+    return out_s, out_d, jnp.maximum(sample_m, jnp.int32(min(1, m)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingStrategy:
+    """One pluggable sampling phase (ConnectIt's sampling axis).
+
+    ``prepare(src, dst, n_vertices, k) -> (src', dst', sample_m)``
+    returns the edge list *permuted* so the sampled edges form the
+    leading ``sample_m`` positions (``sample_m`` is an int32 scalar, may
+    be traced).  Reducing every sampler to permutation + prefix is the
+    soundness argument of DESIGN.md §16: the main loop then treats any
+    strategy exactly like the original prefix sampler, and a sampled
+    sweep is just a sound min-mapping sweep over fewer edges.
+    """
+
+    name: str
+    prepare: Callable[[jax.Array, jax.Array, int, int],
+                      Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+_SAMPLING_REGISTRY: Dict[str, SamplingStrategy] = {}
+
+
+def register_sampling_strategy(strategy: SamplingStrategy
+                               ) -> SamplingStrategy:
+    _SAMPLING_REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+register_sampling_strategy(SamplingStrategy("prefix", _prepare_prefix))
+register_sampling_strategy(SamplingStrategy("kout", _prepare_kout))
+register_sampling_strategy(SamplingStrategy("bfs", _prepare_bfs))
+
+# canonical order, used by SolveOptions validation and the bench matrix
+SAMPLING_STRATEGIES = ("prefix", "kout", "bfs")
+
+
+def get_sampling_strategy(name: str) -> SamplingStrategy:
+    if name not in _SAMPLING_REGISTRY:
+        raise ValueError(
+            f"unknown sampling_strategy {name!r}; one of "
+            f"{tuple(sorted(_SAMPLING_REGISTRY))}")
+    return _SAMPLING_REGISTRY[name]
+
+
+def prepare_sampling(name: str, src: jax.Array, dst: jax.Array,
+                     n_vertices: int, k: int = DEFAULT_SAMPLING_K
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Permute ``(src, dst)`` so the strategy's sample is the leading
+    prefix; returns ``(src', dst', sample_m)``."""
+    if k < 1:
+        raise ValueError(f"sampling k must be >= 1, got {k}")
+    return get_sampling_strategy(name).prepare(src, dst, n_vertices, k)
 
 
 def largest_component_label(L: jax.Array, n_vertices: int) -> jax.Array:
@@ -115,18 +284,10 @@ def contract_edges(
     retire = retire | ~act
     # Stable two-way partition in O(m) via two prefix sums — replaces the
     # previous stable argsort (O(m log m) and the dominant term of every
-    # compaction, ROADMAP open item 1).  Keepers land at their keep-rank,
-    # retirees after the last keeper at their retire-rank; both ranks are
-    # monotone in position, so the relative order within each class is
-    # preserved exactly as the stable sort's was.
-    keep = ~retire
-    n_keep = jnp.sum(keep).astype(active_m.dtype)
-    kidx = jnp.cumsum(keep.astype(jnp.int32)) - 1
-    ridx = n_keep + jnp.cumsum(retire.astype(jnp.int32)) - 1
-    dest = jnp.where(keep, kidx, ridx).astype(jnp.int32)
-    out_s = jnp.zeros_like(rs).at[dest].set(rs)
-    out_d = jnp.zeros_like(rd).at[dest].set(rd)
-    return out_s, out_d, n_keep
+    # compaction, ROADMAP open item 1).  Shared with the sampling
+    # strategies' sampled-edges-first reorder (stable_partition).
+    out_s, out_d, n_keep = stable_partition(rs, rd, ~retire)
+    return out_s, out_d, n_keep.astype(active_m.dtype)
 
 
 def masked_converged_early(
@@ -159,10 +320,20 @@ def frontier_limit(it: jax.Array, active_m: jax.Array, sample_m: jax.Array,
 
 def gate_sampling_done(done: jax.Array, it: jax.Array,
                        sampling: int) -> jax.Array:
-    """Convergence is never declared from sample-prefix sweeps: the
-    sample sees only part of the graph."""
-    if sampling > 0:
-        return done & (it >= sampling)
+    """Pass-through: convergence may fire during the sampling phase.
+
+    The old gate (``done & (it >= sampling)``) held convergence hostage
+    to the full sampling budget on the reasoning that "the sample sees
+    only part of the graph" — but :func:`masked_converged_early` checks
+    the §III-B2 predicate over the *entire* active prefix, not just the
+    swept sample, so ``done`` already certifies the full fixed point.
+    The gate only burned ``sampling - it`` no-op iterations on graphs
+    that converge during sampling (an already-connected warm start, or
+    an edgeless graph whose every sampled sweep is empty).  Kept as a
+    named seam so the masked, staged, and distributed engines document
+    the shared rationale at their one convergence site.
+    """
+    del it, sampling
     return done
 
 
@@ -254,6 +425,7 @@ def adaptive_fixpoint(
     compact_every: int,
     max_iters: int,
     active_m0: Optional[jax.Array] = None,
+    sample_m0: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Run ``step`` to the connectivity fixed point, work-adaptively.
 
@@ -274,6 +446,10 @@ def adaptive_fixpoint(
         the streaming engine's pre-retired padded tail
         (``connectivity.streaming``) — so it is never swept *and never
         counted* in ``edges_visited``.
+      sample_m0: sample-prefix width (traced int32 scalar; default the
+        deterministic ``sample_prefix_m``).  A non-default
+        :class:`SamplingStrategy` passes the width of its sampled-first
+        permutation here (``prepare_sampling``).
 
     Returns:
       ``(labels, iterations, converged, active_m, edges_visited)``.
@@ -281,7 +457,8 @@ def adaptive_fixpoint(
       2**24 per-increment precision; exact for every suite graph here).
     """
     m = src.shape[0]
-    sample_m = jnp.int32(sample_prefix_m(m))
+    sample_m = (jnp.int32(sample_prefix_m(m)) if sample_m0 is None
+                else jnp.asarray(sample_m0, jnp.int32))
 
     def cond(s: FrontierState):
         return (~s.done) & (s.it < max_iters)

@@ -414,8 +414,10 @@ class OutOfCoreContraction:
             # exactly the frontier, contracting them is the whole point
             compact_every=self.opts.compact_every or 1,
             max_iters=self.opts.max_iters or 100_000)
+        # [:4] drops the static provenance tuple (5th element) the
+        # contour solver returns for the registry facade
         labels, it, done, visited = _contour_solver(graph, finish_opts,
-                                                    self.labels)
+                                                    self.labels)[:4]
         self.labels = labels
         self.iterations += int(it)
         self.visited += float(visited)

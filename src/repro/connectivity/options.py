@@ -58,6 +58,11 @@ class SolveOptions:
     async_compress: int = 1                # in-iteration pointer-jump rounds
     sampling: int = 0                      # frontier sample-prefix sweeps
     compact_every: int = 0                 # contraction cadence (0 = dense)
+    # sampling-phase strategy (frontier.SAMPLING_STRATEGIES): None = the
+    # per-solver default ("prefix"); an explicit value is treated as
+    # *pinned* by the solver="auto" cost model (costmodel.resolve_strategy)
+    sampling_strategy: Optional[str] = None
+    sampling_k: int = 2                    # k-out sampler fan-in per vertex
     warm_start: Optional[Any] = None       # labels array or ComponentResult
     # graceful degradation (DESIGN.md §12): when a non-XLA kernel launch
     # fails with a transient error, retry the solve on the XLA reference
@@ -99,6 +104,14 @@ class SolveOptions:
             value = getattr(self, field)
             if value < 0:
                 raise ValueError(f"{field} must be >= 0, got {value}")
+        if self.sampling_strategy is not None:
+            # deferred: frontier pulls in jax.numpy helpers; keep the
+            # options module import-light
+            from repro.connectivity.frontier import get_sampling_strategy
+            get_sampling_strategy(self.sampling_strategy)  # raises on typo
+        if self.sampling_k < 1:
+            raise ValueError(
+                f"sampling_k must be >= 1, got {self.sampling_k}")
         if self.mesh is not None and not self.edge_axes:
             raise ValueError("edge_axes must be non-empty when a mesh is "
                              "given")

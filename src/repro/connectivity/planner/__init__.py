@@ -19,6 +19,9 @@ into a first-class, *measured* layer:
   the whole-L ceiling derived from it (was a hard-coded constant).
 * :mod:`~repro.connectivity.planner.staged` — the physically-sliced
   staged frontier driver (the grid really shrinks with the frontier).
+* :mod:`~repro.connectivity.planner.costmodel` — the ``solver="auto"``
+  strategy cost model (pinned > fitted from the bench artifact >
+  heuristic), DESIGN.md §16.
 
 :func:`resolve_plan` is the single resolution point::
 
@@ -36,6 +39,11 @@ from typing import Optional
 import jax
 
 from repro.connectivity.planner import cache
+from repro.connectivity.planner.costmodel import (
+    ENV_BENCH_ARTIFACT,
+    StrategyChoice,
+    resolve_strategy,
+)
 from repro.connectivity.planner.autotune import (
     autotune,
     candidate_plans,
@@ -67,7 +75,10 @@ from repro.connectivity.planner.vmem import (
 __all__ = [
     "BACKENDS",
     "COMPACT_SCHEDULES",
+    "ENV_BENCH_ARTIFACT",
     "ENV_VMEM_BYTES",
+    "StrategyChoice",
+    "resolve_strategy",
     "OOCORE_BYTES_PER_EDGE",
     "ORIGINS",
     "SINGLE_TILE_MAX_N",

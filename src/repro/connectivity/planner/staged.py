@@ -99,30 +99,55 @@ def _sampling_stage(
     n_vertices: int,
     vmem_limit_bytes=None,
 ):
-    """The ``sampling`` prefix sweeps over the *sliced* sample arrays,
-    then the largest-component filter over the full edge list.
+    """The ``sampling`` sweeps over the *sliced* sample arrays, with the
+    masked path's convergence check and compaction schedule per body.
 
-    Equivalent to the masked path's first ``sampling`` iterations: there
-    the limit masks everything past ``sample_m`` to ``(0, 0)`` self-loops
-    (scatter-min no-ops, since ``L[0] == 0`` under the ``L[v] <= v``
-    invariant), and convergence is never declared from a sample sweep
-    (``gate_sampling_done``), so no checks are needed here either.
+    Bit-equivalent to the masked path's first ``sampling`` iterations:
+    there the limit masks everything past ``sample_m`` to ``(0, 0)``
+    self-loops (scatter-min no-ops, since ``L[0] == 0`` under the
+    ``L[v] <= v`` invariant); here the sweep runs over the physical
+    slice at the same limit.  The §III-B2 check runs over the *full*
+    active prefix (``masked_converged_early``), so a graph that reaches
+    its fixed point mid-sampling exits with ``done`` — same iteration
+    and visited counters as the masked loop.  ``apply_compaction`` with
+    ``compact_every=0`` fires exactly the one largest-component filter
+    at ``it1 == sampling`` (the masked schedule's ``do_gen`` is also
+    inert while ``it1 <= sampling``).  The sliced sample arrays never
+    need recompaction: they are last swept at ``it == sampling - 1``,
+    before the filter fires.
+
+    Returns ``(L, it, done, src, dst, active_m, visited)``.
     """
     step = _build_step(variant, warmup, async_compress, backend, plan,
                        vmem_limit_bytes)
     sample_m = jnp.int32(src_s.shape[0])
     iters = min(sampling, max_iters)
 
-    def body(i, L):
-        return step(L, jnp.int32(i), src_s, dst_s, sample_m)
+    def cond(s: _StageState):
+        return (~s.done) & (s.it < iters)
 
-    L = jax.lax.fori_loop(0, iters, body, L0)
-    visited = jnp.float32(iters) * sample_m.astype(jnp.float32)
-    # the one largest-component filter pass, over the full edge list
-    src2, dst2, active2 = fr.apply_compaction(
-        L, src, dst, jnp.int32(src.shape[0]), jnp.int32(sampling),
-        sampling=sampling, compact_every=0, n_vertices=n_vertices)
-    return L, src2, dst2, active2, visited
+    def body(s: _StageState):
+        limit = fr.frontier_limit(s.it, s.active_m, sample_m, sampling)
+        L = step(s.L, s.it, src_s, dst_s, limit)
+        visited = s.visited + limit.astype(jnp.float32)
+        done = fr.gate_sampling_done(
+            fr.masked_converged_early(L, s.src, s.dst, s.active_m),
+            s.it, sampling)
+        it1 = s.it + 1
+        src2, dst2, active2 = fr.apply_compaction(
+            L, s.src, s.dst, s.active_m, it1, sampling=sampling,
+            compact_every=0, n_vertices=n_vertices)
+        return _StageState(L=L, it=it1, done=done, src=src2, dst=dst2,
+                           active_m=active2, visited=visited)
+
+    out = jax.lax.while_loop(
+        cond, body,
+        _StageState(L=L0, it=jnp.int32(0), done=jnp.array(False),
+                    src=src, dst=dst,
+                    active_m=jnp.int32(src.shape[0]),
+                    visited=jnp.float32(0)))
+    return (out.L, out.it, out.done, out.src, out.dst, out.active_m,
+            out.visited)
 
 
 @functools.partial(
@@ -216,6 +241,8 @@ def staged_adaptive_labels(
     plan=None,
     sampling: int = 0,
     compact_every: int = 0,
+    sampling_strategy: str = "prefix",
+    sampling_k: int = fr.DEFAULT_SAMPLING_K,
     vmem_limit_bytes: Optional[int] = None,
 ):
     """Host-driven staged fixpoint; same contract as ``contour_labels``.
@@ -223,7 +250,10 @@ def staged_adaptive_labels(
     Returns ``(labels, n_iterations, converged, edges_visited)``.  Must be
     called eagerly (it reads ``active_m`` between stages); callers under a
     trace use the masked schedule instead (``solvers._contour_solver``
-    guards on tracers).
+    guards on tracers).  ``sampling_strategy``/``sampling_k`` pick the
+    sampling phase's edge permutation (``frontier.prepare_sampling``) —
+    being eager, this driver can slice the strategy's data-dependent
+    sample width into a physical prefix.
     """
     if variant == "C-Syn":
         raise ValueError(
@@ -244,10 +274,16 @@ def staged_adaptive_labels(
     active = jnp.int32(src.shape[0])
 
     if sampling > 0:
-        sm = fr.sample_prefix_m(int(src.shape[0]))
-        L, src, dst, active, visited = _sampling_stage(
+        if sampling_strategy != "prefix":
+            src, dst, sample_m = fr.prepare_sampling(
+                sampling_strategy, src, dst, n_vertices, sampling_k)
+            sm = int(sample_m)  # eager driver: slice the traced width
+        else:
+            sm = fr.sample_prefix_m(int(src.shape[0]))
+        L, it, done, src, dst, active, visited = _sampling_stage(
             src[:sm], dst[:sm], src, dst, L, **statics)
-        it = jnp.int32(min(sampling, max_iters))
+        if bool(done) or int(it) >= max_iters:
+            return fr.compress_full(L), it, done, visited
 
     # slice straight away when the filter already collapsed the frontier
     first = True

@@ -15,6 +15,9 @@ Five families, one signature (DESIGN.md §9 maps them onto the paper):
 * ``oocore``            — out-of-core multi-round contraction
   (DESIGN.md §15): edges stream from host memory chunk by chunk, so
   problem size is decoupled from device memory.
+* ``auto``              — ConnectIt-style measured dispatch (DESIGN.md
+  §16): the planner cost model picks the (solver family, sampling
+  strategy) per graph and delegates; the choice lands in provenance.
 """
 from __future__ import annotations
 
@@ -28,7 +31,9 @@ from repro.connectivity import oocore as _oocore
 from repro.connectivity import planner as _planner
 from repro.connectivity import unionfind as _unionfind
 from repro.connectivity.planner import staged as _staged
-from repro.connectivity.registry import SolverSpec, register_solver
+from repro.connectivity.registry import (SolverSpec, get_solver,
+                                         register_solver)
+from repro.graphs import stats as _stats
 from repro.graphs.generators import ArrayChunks
 
 # Registry names that resolve to the out-of-core solver (and therefore
@@ -61,10 +66,18 @@ def resolve_backend_plan(n_vertices: int, n_edges: int, opts):
     return backend, plan
 
 
+def _sampling_provenance(opts):
+    """Static provenance entry naming the sampling strategy in effect."""
+    if opts.sampling <= 0:
+        return ()
+    return (f"sampling_strategy:{opts.sampling_strategy or 'prefix'}",)
+
+
 def _contour_solver(graph, opts, init_labels):
     backend, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
                                          opts)
     variant = opts.variant or "C-2"
+    strategy = opts.sampling_strategy or "prefix"
     adaptive = opts.sampling > 0 or opts.compact_every > 0
     if (adaptive and variant != "C-Syn"
             and plan.compact_schedule == "staged"
@@ -73,7 +86,7 @@ def _contour_solver(graph, opts, init_labels):
         # really shrink.  Unavailable under an enclosing trace (vmap'd
         # solve_batch, user jit) — those keep the masked in-loop schedule,
         # which is bit-identical at the fixed point.
-        return _staged.staged_adaptive_labels(
+        out = _staged.staged_adaptive_labels(
             graph.src, graph.dst, graph.n_vertices, init_labels,
             variant=variant,
             max_iters=opts.max_iters,
@@ -83,9 +96,12 @@ def _contour_solver(graph, opts, init_labels):
             plan=plan,
             sampling=opts.sampling,
             compact_every=opts.compact_every,
+            sampling_strategy=strategy,
+            sampling_k=opts.sampling_k,
             vmem_limit_bytes=opts.vmem_limit_bytes,
         )
-    return _contour.contour_labels(
+        return (*out, _sampling_provenance(opts))
+    out = _contour.contour_labels(
         graph.src, graph.dst, graph.n_vertices, init_labels,
         variant=variant,
         max_iters=opts.max_iters,
@@ -95,8 +111,11 @@ def _contour_solver(graph, opts, init_labels):
         plan=plan,
         sampling=opts.sampling,
         compact_every=opts.compact_every,
+        sampling_strategy=strategy,
+        sampling_k=opts.sampling_k,
         vmem_limit_bytes=opts.vmem_limit_bytes,
     )
+    return (*out, _sampling_provenance(opts))
 
 
 def _distributed_solver(graph, opts, init_labels):
@@ -105,6 +124,13 @@ def _distributed_solver(graph, opts, init_labels):
             "the 'distributed' solver needs SolveOptions.mesh (a "
             "jax.sharding.Mesh); for single-device solves use "
             "algorithm='contour'")
+    if (opts.sampling_strategy or "prefix") != "prefix":
+        raise ValueError(
+            "the 'distributed' solver samples a deterministic per-shard "
+            "edge prefix; sampling_strategy "
+            f"{opts.sampling_strategy!r} is single-device only (it "
+            "permutes the global edge list, which would break the static "
+            "shard layout) — use algorithm='contour'")
     backend, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
                                          opts)
     return _distributed.distributed_contour(
@@ -154,6 +180,48 @@ def _oocore_solver(graph, opts, init_labels):
     return _oocore.oocore_labels(chunks, opts, init_labels=init_labels)
 
 
+def _auto_solver(graph, opts, init_labels):
+    """ConnectIt-style measured dispatch (DESIGN.md §16).
+
+    Resolves a (solver family, sampling strategy) via the planner cost
+    model — pinned ``SolveOptions`` fields > fitted bench-artifact model
+    > heuristic table — then delegates to the chosen registered solver.
+    The choice (and the delegate's plan) is returned in the static
+    provenance element so every auto solve records what ran and why.
+    """
+    skew = None
+    if not isinstance(graph.src, jax.core.Tracer):
+        # degree skew needs values, not shapes; under an enclosing trace
+        # the model falls back to its size-only features
+        np_src, np_dst, n = graph.to_numpy()
+        skew = _stats.degree_skew(np_src, np_dst, n)
+    choice = _planner.resolve_strategy(
+        graph.n_vertices, graph.n_edges,
+        degree_skew=skew,
+        pinned_strategy=opts.sampling_strategy,
+        pinned_variant=opts.variant)
+    delegate = get_solver(choice.solver)
+    d_opts = opts.replace(
+        algorithm=choice.solver,
+        variant=choice.variant,
+        sampling_strategy=choice.sampling_strategy,
+        # explicit schedule knobs on the options win over the model's
+        sampling=opts.sampling or choice.sampling,
+        compact_every=opts.compact_every or choice.compact_every,
+    )
+    out = tuple(delegate.fn(graph, d_opts, init_labels))
+    provenance = [choice.provenance_entry()]
+    from repro.connectivity.solve import _PLANNED_SOLVERS  # lazy: cycle
+    if choice.solver in _PLANNED_SOLVERS:
+        _, plan = resolve_backend_plan(graph.n_vertices, graph.n_edges,
+                                       d_opts)
+        provenance.append(plan.provenance_entry())
+    if len(out) > 4 and out[4]:
+        provenance.extend(out[4])
+    base = out[:4] if len(out) >= 4 else (*out[:3], None)
+    return (*base, tuple(provenance))
+
+
 CONTOUR = register_solver(SolverSpec(
     name="contour",
     fn=_contour_solver,
@@ -201,6 +269,16 @@ UNION_FIND = register_solver(SolverSpec(
     supports_batch=False,        # host-side sequential loop
     runs_on="host",
     paper_ref="§III-C (ConnectIt stand-in: Rem's union-find)",
+))
+
+AUTO = register_solver(SolverSpec(
+    name="auto",
+    fn=_auto_solver,
+    variants=_contour.VARIANTS + ("C-<h>",),
+    default_variant=None,        # the cost model picks unless pinned
+    default_max_iters=100_000,
+    supports_streaming=True,
+    paper_ref="ConnectIt strategy-matrix dispatch (DESIGN.md §16)",
 ))
 
 OOCORE = register_solver(SolverSpec(

@@ -22,6 +22,21 @@ def degree_stats(src, dst, n_vertices: int):
     }
 
 
+def degree_skew(src, dst, n_vertices: int) -> float:
+    """Max-degree / mean-degree ratio — the cost model's skew feature.
+
+    ~1 for regular graphs (paths, grids), large for hub-dominated
+    families (stars, R-MAT).  0.0 for edgeless graphs (no degrees to
+    compare), so degenerate inputs stay finite.
+    """
+    if n_vertices <= 0 or len(src) == 0:
+        return 0.0
+    deg = np.bincount(np.concatenate([np.asarray(src), np.asarray(dst)]),
+                      minlength=n_vertices)
+    mean = float(deg.mean())
+    return float(deg.max()) / mean if mean > 0 else 0.0
+
+
 def _bfs_ecc(row_ptr, col_idx, start: int, n: int) -> tuple[int, int]:
     """Eccentricity of ``start`` via NumPy frontier BFS; returns (ecc, far)."""
     dist = np.full(n, -1, dtype=np.int64)

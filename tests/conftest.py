@@ -16,6 +16,16 @@ os.environ.setdefault(
     os.path.join(tempfile.mkdtemp(prefix="repro-test-tuning-"),
                  "contour_tuning.json"))
 
+# Hermetic strategy cost model: solver="auto" fits its 1-NN from the
+# bench artifact (planner.costmodel); pointing the lookup at a
+# nonexistent file keeps test outcomes independent of whatever
+# BENCH_connectivity.json happens to be committed.  Tests that exercise
+# the fitted path write their own artifact and pass bench_path=.
+os.environ.setdefault(
+    "REPRO_BENCH_ARTIFACT",
+    os.path.join(tempfile.mkdtemp(prefix="repro-test-bench-"),
+                 "BENCH_connectivity.json"))
+
 
 @pytest.fixture(scope="session")
 def rng():

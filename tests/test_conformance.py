@@ -53,6 +53,22 @@ SOLVER_CONFIGS = [
     ("contour-Cm", dict(algorithm="contour", variant="C-m", backend="xla")),
     ("contour-frontier", dict(algorithm="contour", backend="xla",
                               sampling=2, compact_every=2)),
+    # the strategy matrix (DESIGN.md §16): every registered sampling
+    # strategy through the work-adaptive schedule, across finish
+    # variants, plus the cost-model dispatcher itself
+    ("contour-kout", dict(algorithm="contour", backend="xla",
+                          sampling=2, compact_every=2,
+                          sampling_strategy="kout")),
+    ("contour-bfs", dict(algorithm="contour", backend="xla",
+                         sampling=2, compact_every=2,
+                         sampling_strategy="bfs")),
+    ("contour-Cm-kout", dict(algorithm="contour", variant="C-m",
+                             backend="xla", sampling=2, compact_every=2,
+                             sampling_strategy="kout")),
+    ("contour-Cm-bfs", dict(algorithm="contour", variant="C-m",
+                            backend="xla", sampling=2, compact_every=2,
+                            sampling_strategy="bfs")),
+    ("auto", dict(algorithm="auto")),
     ("fastsv", dict(algorithm="fastsv")),
     ("label_propagation", dict(algorithm="label_propagation")),
     ("union_find", dict(algorithm="union_find")),
@@ -71,7 +87,7 @@ def test_every_registry_solver_is_covered():
     built_in = {spec.name for spec in (builtin.CONTOUR, builtin.DISTRIBUTED,
                                        builtin.FASTSV,
                                        builtin.LABEL_PROPAGATION,
-                                       builtin.UNION_FIND)}
+                                       builtin.UNION_FIND, builtin.AUTO)}
     covered = {cfg.get("algorithm") for _, cfg in SOLVER_CONFIGS}
     assert built_in <= covered
     assert built_in <= set(list_solvers())
@@ -158,6 +174,31 @@ def test_disjoint_union_block_diagonality(name, cfg):
     assert (labels[:n1] == base1).all(), (name, n1_name)
     assert (labels[n1:] == base2 + n1).all(), (name, n2_name)
     _assert_oracle_partition(labels, union, name)
+
+
+@pytest.mark.parametrize("name,cfg", SOLVER_CONFIGS, ids=CONFIG_IDS)
+def test_warm_start_invariance(name, cfg):
+    """Warm starts are metamorphic too: restarting from any sound upper
+    bound of the fixed point (a cold solve's own labels, or a prefix
+    solve of half the edges) must land on the same canonical labels."""
+    for gname, g in _graphs(small_only=True):
+        cfg2 = dict(cfg)
+        if cfg2.get("mesh") == "MESH1":
+            cfg2["mesh"] = _mesh1()
+        base = _solve_np(g, cfg)
+        opts = SolveOptions(**cfg2)
+        again = solve(g, opts, warm_start=jnp_array(base))
+        assert (np.asarray(again.labels) == base).all(), (name, gname)
+        src, dst, n = g.to_numpy()
+        half = Graph.from_numpy(src[: len(src) // 2], dst[: len(dst) // 2], n)
+        partial = solve(half, opts)
+        resumed = solve(g, opts, warm_start=partial)
+        assert (np.asarray(resumed.labels) == base).all(), (name, gname)
+
+
+def jnp_array(x):
+    import jax.numpy as jnp
+    return jnp.asarray(x)
 
 
 # ---------------------------------------------------------------------------

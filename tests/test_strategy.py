@@ -1,0 +1,375 @@
+"""Strategy matrix + ``solver="auto"`` cost model (DESIGN.md §16).
+
+Covers the pluggable sampling strategies (soundness: every strategy is a
+permutation of the edge list plus a prefix width, so the fixed point is
+strategy-independent), the cost-model precedence chain
+(pinned > fitted-from-artifact > heuristic), the degenerate feature
+regimes (m=0, n=1), the provenance strings on every path, and the two
+sampling-phase bugfix regressions of ISSUE 10:
+
+* the zero-width sampling prefix on small graphs (``m //
+  SAMPLE_PREFIX_DENOM == 0``) must clamp to >= 1 edge;
+* ``gate_sampling_done`` must not hold convergence hostage to the full
+  sampling budget — a graph already at its fixed point exits in one
+  iteration on both the masked and staged schedules.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.connectivity import SolveOptions, solve, solve_batch
+from repro.connectivity import frontier as fr
+from repro.connectivity.planner import costmodel
+from repro.connectivity.planner import ExecutionPlan
+from repro.graphs import generators as gen
+from repro.graphs.oracle import connected_components_oracle
+from repro.graphs.stats import degree_skew
+from repro.graphs.structs import Graph
+
+pytestmark = pytest.mark.strategy
+
+ALL_STRATEGIES = fr.SAMPLING_STRATEGIES
+
+
+def _rand_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    return Graph.from_numpy(rng.integers(0, n, m), rng.integers(0, n, m), n)
+
+
+def _oracle(g):
+    return connected_components_oracle(*g.to_numpy())
+
+
+# ---------------------------------------------------------------- samplers
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("n,m,seed", [(50, 200, 0), (200, 90, 1),
+                                      (64, 64, 2)])
+def test_prepare_sampling_is_permutation_with_nonzero_prefix(
+        strategy, n, m, seed):
+    """Every strategy permutes the edge list and claims a 1..m prefix —
+    the property the soundness argument (DESIGN.md §16) rests on."""
+    g = _rand_graph(n, m, seed)
+    src2, dst2, sample_m = fr.prepare_sampling(strategy, g.src, g.dst, n)
+    pairs = sorted(zip(np.asarray(g.src).tolist(),
+                       np.asarray(g.dst).tolist()))
+    pairs2 = sorted(zip(np.asarray(src2).tolist(),
+                        np.asarray(dst2).tolist()))
+    assert pairs == pairs2, strategy        # a permutation, nothing lost
+    assert 1 <= int(sample_m) <= m, strategy
+
+
+def test_kout_prefix_covers_every_vertex_k_edges():
+    """k-out/Afforest: each vertex's first k incident edges land in the
+    sampled prefix."""
+    g = _rand_graph(80, 400, 3)
+    k = 2
+    src2, dst2, sample_m = fr.prepare_sampling("kout", g.src, g.dst, 80,
+                                               k=k)
+    sm = int(sample_m)
+    seen = np.zeros(80, dtype=int)
+    np.add.at(seen, np.asarray(src2[:sm]), 1)
+    np.add.at(seen, np.asarray(dst2[:sm]), 1)
+    deg = np.zeros(80, dtype=int)
+    np.add.at(deg, np.asarray(g.src), 1)
+    np.add.at(deg, np.asarray(g.dst), 1)
+    assert (seen >= np.minimum(deg, k)).all()
+
+
+def test_unknown_strategy_and_bad_k_fail_eagerly():
+    g = _rand_graph(10, 20, 4)
+    with pytest.raises(ValueError, match="unknown sampling_strategy"):
+        fr.prepare_sampling("bogus", g.src, g.dst, 10)
+    with pytest.raises(ValueError, match="sampling k must be >= 1"):
+        fr.prepare_sampling("kout", g.src, g.dst, 10, k=0)
+
+
+def test_solve_options_reject_bad_strategy_knobs():
+    """Satellite bugfix: typo'd knobs die at validate(), not trace time."""
+    with pytest.raises(ValueError, match="unknown sampling_strategy"):
+        SolveOptions(sampling_strategy="prefx").validate()
+    with pytest.raises(ValueError, match="sampling_k must be >= 1"):
+        SolveOptions(sampling_k=0).validate()
+    with pytest.raises(ValueError, match="unknown sampling_strategy"):
+        solve(_rand_graph(8, 10, 5), sampling_strategy="afforest")
+
+
+def test_registering_a_custom_strategy_extends_the_matrix():
+    """The registry is open: a registered name passes validation and
+    runs through the same adaptive schedule."""
+    def prepare(src, dst, n_vertices, k):
+        # reverse order: still a permutation + prefix, still sound
+        return src[::-1], dst[::-1], jnp.int32(max(1, src.shape[0] // 2))
+
+    fr.register_sampling_strategy(
+        fr.SamplingStrategy(name="_test_rev", prepare=prepare))
+    try:
+        g = _rand_graph(60, 150, 6)
+        r = solve(g, SolveOptions(algorithm="contour", sampling=2,
+                                  compact_every=2, backend="xla",
+                                  sampling_strategy="_test_rev"))
+        assert np.array_equal(np.asarray(r.labels), _oracle(g))
+        assert "sampling_strategy:_test_rev" in (r.provenance or ())
+    finally:
+        fr._SAMPLING_REGISTRY.pop("_test_rev", None)
+
+
+# ---------------------------------------------- strategy x engine matrix
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("schedule", ["masked", "staged"])
+def test_strategies_bit_identical_across_schedules(strategy, schedule):
+    g = _rand_graph(3000, 5000, 7)
+    plan = ExecutionPlan(backend="xla", compact_schedule=schedule,
+                         origin="pinned")
+    r = solve(g, SolveOptions(algorithm="contour", variant="C-2",
+                              backend="xla", plan=plan, sampling=2,
+                              compact_every=2, sampling_strategy=strategy))
+    assert np.array_equal(np.asarray(r.labels), _oracle(g))
+    assert f"sampling_strategy:{strategy}" in r.provenance
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_strategies_under_vmapped_solve_batch(strategy):
+    """The traced path: data-dependent sample widths must survive vmap."""
+    graphs = [_rand_graph(40, 90, s) for s in (8, 9, 10)]
+    res = solve_batch(graphs, SolveOptions(
+        algorithm="contour", backend="xla", sampling=2, compact_every=2,
+        sampling_strategy=strategy))
+    for g, lab in zip(graphs, res.unstack()):
+        assert np.array_equal(np.asarray(lab.labels), _oracle(g))
+
+
+def test_distributed_rejects_nonprefix_strategy():
+    import jax as _jax
+    from repro import jax_compat
+    mesh = jax_compat.device_mesh(np.array(_jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="single-device only"):
+        solve(_rand_graph(20, 40, 11),
+              SolveOptions(algorithm="distributed", mesh=mesh,
+                           sampling=2, sampling_strategy="kout"))
+
+
+# -------------------------------------------------- bugfix regressions
+
+
+def test_sampling_prefix_clamped_at_small_m():
+    """Regression (pre-PR bug 1): at ``m = SAMPLE_PREFIX_DENOM - 1`` the
+    integer-division prefix would be 0 edges — pure no-op rounds.  The
+    width must clamp to >= 1 and the solve must do real work during
+    sampling."""
+    m = fr.SAMPLE_PREFIX_DENOM - 1          # = 3
+    assert fr.sample_prefix_m(m) == 1
+    g = Graph.from_numpy(np.array([0, 1, 2]), np.array([1, 2, 3]), 4)
+    for strategy in ALL_STRATEGIES:
+        r = solve(g, SolveOptions(algorithm="contour", backend="xla",
+                                  sampling=3, sampling_strategy=strategy))
+        assert np.array_equal(np.asarray(r.labels), _oracle(g)), strategy
+        # every sampling sweep touched >= 1 edge: with a zero-width
+        # prefix the counter would undercount by the whole phase
+        assert float(r.edges_visited) >= 3.0, strategy
+
+
+def test_edgeless_graph_converges_in_one_iteration():
+    """Regression (pre-PR bug 2): with zero edges every sweep is empty,
+    so the first convergence check fires — but the old
+    ``gate_sampling_done`` forced ``sampling + 1`` iterations anyway."""
+    g = Graph.from_numpy(np.zeros(0, np.int32), np.zeros(0, np.int32), 6)
+    r = solve(g, SolveOptions(algorithm="contour", backend="xla",
+                              sampling=3))
+    assert bool(r.converged)
+    assert int(r.iterations) == 1
+    assert np.array_equal(np.asarray(r.labels), np.arange(6))
+
+
+@pytest.mark.parametrize("schedule", ["masked", "staged"])
+def test_warm_start_converged_exits_during_sampling(schedule):
+    """Regression (pre-PR bug 2, warm-start form): re-solving from an
+    already-converged label fixed point must exit after one iteration —
+    the old gate burned the full ``sampling`` budget first."""
+    g = _rand_graph(3000, 5000, 12)
+    r0 = solve(g, SolveOptions(algorithm="contour", backend="xla"))
+    assert bool(r0.converged)
+    plan = ExecutionPlan(backend="xla", compact_schedule=schedule,
+                         origin="pinned")
+    r = solve(g, SolveOptions(algorithm="contour", backend="xla",
+                              plan=plan, sampling=4, compact_every=2),
+              warm_start=r0)
+    assert bool(r.converged)
+    assert int(r.iterations) == 1, schedule
+    assert np.array_equal(np.asarray(r.labels), np.asarray(r0.labels))
+
+
+# ------------------------------------------------------------ cost model
+
+
+def test_costmodel_precedence_pinned_wins(tmp_path):
+    choice = costmodel.resolve_strategy(
+        1000, 4000, degree_skew=50.0, pinned_strategy="bfs",
+        bench_path=tmp_path / "nope.json")
+    assert choice.origin == "pinned"
+    assert choice.sampling_strategy == "bfs"
+    assert choice.sampling >= 1
+    assert "origin=pinned" in choice.provenance_entry()
+
+
+def _write_artifact(path, rows):
+    path.write_text(json.dumps({"schema": 7, "strategy_gate": rows}))
+
+
+def test_costmodel_fitted_copies_nearest_measured_graph(tmp_path):
+    art = tmp_path / "bench.json"
+    _write_artifact(art, {
+        "hubby": {"n": 1000, "m": 50_000, "degree_skew": 100.0,
+                  "sides": {"prefix": {"seconds": [2.0]},
+                            "kout": {"seconds": [1.0]},
+                            "auto": {"seconds": [1.0]}}},
+        "pathy": {"n": 100_000, "m": 100_000, "degree_skew": 2.0,
+                  "sides": {"prefix": {"seconds": [1.0]},
+                            "kout": {"seconds": [3.0]}}},
+    })
+    near_hub = costmodel.resolve_strategy(2000, 80_000, degree_skew=80.0,
+                                          bench_path=art)
+    assert near_hub.origin == "fitted"
+    assert near_hub.sampling_strategy == "kout"
+    assert near_hub.neighbor == "hubby"
+    assert "nn=hubby" in near_hub.provenance_entry()
+    near_path = costmodel.resolve_strategy(90_000, 95_000, degree_skew=2.1,
+                                           bench_path=art)
+    assert (near_path.origin, near_path.sampling_strategy) == \
+        ("fitted", "prefix")
+    # pinned still beats a usable fitted model
+    pinned = costmodel.resolve_strategy(2000, 80_000, degree_skew=80.0,
+                                        pinned_strategy="bfs",
+                                        bench_path=art)
+    assert (pinned.origin, pinned.sampling_strategy) == ("pinned", "bfs")
+
+
+def test_costmodel_heuristic_fallbacks(tmp_path):
+    # no artifact at all
+    missing = costmodel.resolve_strategy(1000, 4000, degree_skew=1.5,
+                                         bench_path=tmp_path / "no.json")
+    assert missing.origin == "heuristic"
+    assert missing.solver == "contour"
+    # corrupt artifact must not raise
+    bad = tmp_path / "bad.json"
+    bad.write_text("{ not json !!")
+    corrupt = costmodel.resolve_strategy(1000, 4000, degree_skew=1.5,
+                                         bench_path=bad)
+    assert corrupt.origin == "heuristic"
+    # pre-schema-7 artifacts carry no strategy rows
+    old = tmp_path / "old.json"
+    old.write_text(json.dumps({"schema": 6, "strategy_gate": {}}))
+    assert costmodel.resolve_strategy(
+        1000, 4000, degree_skew=1.5, bench_path=old).origin == "heuristic"
+    # hub regime heuristic
+    hub = costmodel.resolve_strategy(1000, 64_000, degree_skew=100.0,
+                                     bench_path=tmp_path / "no.json")
+    assert hub.sampling_strategy == "kout"
+
+
+def test_costmodel_degenerate_features(tmp_path):
+    for n, m in ((1, 0), (5, 0), (1, 3)):
+        choice = costmodel.resolve_strategy(n, m, degree_skew=0.0,
+                                            bench_path=tmp_path / "x.json")
+        assert choice.origin == "heuristic"
+        assert choice.sampling == 0          # nothing worth sampling
+        assert choice.sampling_strategy == "prefix"
+    # skew=None (tracer regime) is the regular-graph prior, not an error
+    assert costmodel.resolve_strategy(
+        100, 200, degree_skew=None,
+        bench_path=tmp_path / "x.json").sampling_strategy == "prefix"
+
+
+def test_degree_skew_feature():
+    s, d, n = gen.star(64, seed=0).to_numpy()
+    assert degree_skew(s, d, n) > 10.0
+    s, d, n = gen.path(64, seed=0).to_numpy()
+    assert degree_skew(s, d, n) < 2.0
+    assert degree_skew(np.zeros(0, int), np.zeros(0, int), 4) == 0.0
+
+
+# ------------------------------------------------------- solver="auto"
+
+
+def test_auto_solver_bit_identical_and_provenanced():
+    g = _rand_graph(500, 900, 13)
+    r = solve(g, SolveOptions(algorithm="auto"))
+    assert np.array_equal(np.asarray(r.labels), _oracle(g))
+    auto_entries = [p for p in r.provenance if p.startswith("auto:")]
+    assert auto_entries and "origin=heuristic" in auto_entries[0]
+    assert any(p.startswith("plan:") for p in r.provenance)
+
+
+def test_auto_solver_pinned_strategy_in_provenance():
+    g = _rand_graph(500, 900, 14)
+    r = solve(g, SolveOptions(algorithm="auto", sampling_strategy="bfs"))
+    assert np.array_equal(np.asarray(r.labels), _oracle(g))
+    assert any(p.startswith("auto:") and "strategy=bfs" in p
+               and "origin=pinned" in p for p in r.provenance)
+    assert "sampling_strategy:bfs" in r.provenance
+
+
+def test_auto_solver_fitted_end_to_end(tmp_path, monkeypatch):
+    art = tmp_path / "bench.json"
+    _write_artifact(art, {
+        "only": {"n": 500, "m": 900, "degree_skew": 3.0,
+                 "sides": {"prefix": {"seconds": [2.0]},
+                           "bfs": {"seconds": [1.0]}}}})
+    monkeypatch.setenv(costmodel.ENV_BENCH_ARTIFACT, str(art))
+    g = _rand_graph(500, 900, 15)
+    r = solve(g, SolveOptions(algorithm="auto"))
+    assert np.array_equal(np.asarray(r.labels), _oracle(g))
+    assert any("origin=fitted" in p and "strategy=bfs" in p
+               and "nn=only" in p for p in r.provenance)
+
+
+def test_auto_solver_warm_start_and_variant_pin():
+    g = _rand_graph(500, 900, 16)
+    r0 = solve(g, SolveOptions(algorithm="auto"))
+    r = solve(g, SolveOptions(algorithm="auto", variant="C-m"),
+              warm_start=r0)
+    assert bool(r.converged)
+    assert np.array_equal(np.asarray(r.labels), np.asarray(r0.labels))
+
+
+def test_auto_solver_under_solve_batch():
+    """Under vmap the model sees only shape features (skew needs values);
+    the labels must still match the oracle."""
+    graphs = [_rand_graph(40, 90, s) for s in (17, 18)]
+    res = solve_batch(graphs, SolveOptions(algorithm="auto"))
+    for g, lab in zip(graphs, res.unstack()):
+        assert np.array_equal(np.asarray(lab.labels), _oracle(g))
+
+
+# ----------------------------------------------------- artifact checker
+
+
+def test_check_artifact_strategy_gate(tmp_path):
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_artifact", "benchmarks/check_artifact.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    def payload(auto_secs, bit=True):
+        return {"schema": 7, "summary": {"all_correct": True},
+                "strategy_gate": {
+                    "g": {"n": 10, "m": 20, "degree_skew": 1.0,
+                          "sides": {
+                              "prefix": {"bit_identical": True,
+                                         "seconds": [1.0, 1.1]},
+                              "auto": {"bit_identical": bit,
+                                       "seconds": auto_secs}}}}}
+
+    assert mod.check_strategy_gate(payload([1.05])) == []
+    errs = mod.check_strategy_gate(payload([1.5]))
+    assert errs and "geomean" in errs[0]
+    errs = mod.check_strategy_gate(payload([1.0], bit=False))
+    assert any("differ from the dense oracle" in e for e in errs)
+    assert mod.check_strategy_gate({"schema": 7, "strategy_gate": {}})
